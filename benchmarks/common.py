@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+import jax
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "bench_out"
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 5) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, rows: list[dict]) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / name
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_rows(title: str, rows: list[dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))

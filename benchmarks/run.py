@@ -1,0 +1,46 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Outputs CSVs to bench_out/ and prints each table.  The LM roofline table
+(beyond-paper) renders from artifacts/dryrun/ when present (produced by
+launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size sweeps (slow on 1 CPU core)")
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "table3", "roofline"])
+    args = ap.parse_args()
+    quick = not args.full
+
+    if args.only in (None, "table3"):
+        from benchmarks import table3_ablation
+        table3_ablation.run(quick=quick)
+    if args.only in (None, "table2"):
+        from benchmarks import table2_scaling
+        table2_scaling.run(quick=quick)
+    if args.only in (None, "table1"):
+        from benchmarks import table1_accuracy
+        table1_accuracy.run(quick=quick)
+    if args.only in (None, "roofline"):
+        d = Path("artifacts/dryrun")
+        if d.exists() and any(d.glob("*.json")):
+            from repro.launch.roofline import load_records, render_table
+            recs = load_records(d)
+            print("\n== LM roofline (single-pod; see EXPERIMENTS.md) ==")
+            print(render_table(recs, "16x16"))
+        else:
+            print("\n[roofline] no artifacts/dryrun JSONs; run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Paper Table I: reconstruction MSE of MERINDA vs EMILY vs PINN+SR on the
+four benchmark systems.
+
+Published numbers (quoted for reference in EXPERIMENTS.md):
+    system              EMILY        PINN+SR      MERINDA
+    Lotka-Volterra      0.03(0.02)   0.05(0.03)   0.03(0.018)
+    Chaotic Lorenz      1.7(0.6)     2.11(1.4)    1.68(0.4)
+    F8 Crusader         4.2(2.1)     6.9(4.4)     5.1(2.2)
+    Pathogenic Attack   14.3(12.1)   21.4(5.4)    15.1(10.2)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.emily import Emily, EmilyConfig
+from repro.core.merinda import Merinda, MerindaConfig
+from repro.core.metrics import reconstruction_mse
+from repro.core.pinn_sr import PinnSR, PinnSRConfig
+from repro.core.trainer import fit
+from repro.data.pipeline import WindowDataset
+from repro.systems.simulate import register_systems
+from repro.systems.simulate import simulate_batch
+
+SYSTEMS = ["lotka_volterra", "lorenz", "f8_crusader", "pathogenic_attack"]
+
+
+def _mse_merinda(system, ds, key, steps):
+    true_theta = system.true_theta()
+    n_active = int((np.abs(true_theta) > 0).sum())
+    m = Merinda(MerindaConfig(n=system.spec.n, m=system.spec.m,
+                              order=system.spec.order, dt=system.spec.dt,
+                              hidden=64, n_active=n_active))
+    p = m.init(key, m.norm_stats(ds.y_win, ds.u_win))
+    res = fit(m, p, ds.batches(key, 64, epochs=100_000), steps=steps, lr=3e-3)
+    theta = m.recover(res.params, ds.y_win, ds.u_win)
+    return reconstruction_mse(m.lib, theta, ds.y_win, ds.u_win,
+                              system.spec.dt)
+
+
+def _mse_emily(system, ds, key, steps):
+    em = Emily(EmilyConfig(n=system.spec.n, m=system.spec.m,
+                           order=system.spec.order, dt=system.spec.dt,
+                           hidden=64))
+    p = em.init(key)
+    res = fit(em, p, ds.batches(key, 64, epochs=100_000), steps=steps,
+              lr=3e-3)
+    theta = em.recover(res.params, ds.y_win, ds.u_win)
+    return reconstruction_mse(em.lib, theta, ds.y_win, ds.u_win,
+                              system.spec.dt)
+
+
+def _mse_pinnsr(system, trace, ds, key, steps):
+    pm = PinnSR(PinnSRConfig(n=system.spec.n, m=system.spec.m,
+                             order=system.spec.order, dt=system.spec.dt,
+                             horizon=trace.ys.shape[1] - 1))
+    p = pm.init(key, trace.ys[0])
+    batch = (trace.ys_noisy[0], trace.us[0])
+
+    # sequential-thresholding rounds (the SR part) at 60% and 80% of training
+    def post(step, params):
+        if step in (int(steps * 0.6), int(steps * 0.8)):
+            return pm.apply_threshold(params)
+        return params
+
+    res = fit(pm, p, iter(lambda: batch, None), steps=steps, lr=2e-3,
+              post_step=post)
+    theta = pm.recover(res.params)
+    return reconstruction_mse(pm.lib, theta, ds.y_win, ds.u_win,
+                              system.spec.dt)
+
+
+def run(quick: bool = True) -> list[dict]:
+    steps = 400 if quick else 800
+    seeds = 2 if quick else 3
+    rows = []
+    registry = register_systems()
+    for name in SYSTEMS:
+        system = registry[name]()
+        per_model = {"merinda": [], "emily": [], "pinn_sr": []}
+        for seed in range(seeds):
+            # F8's true cubic dynamics diverge for some sampled initial
+            # conditions; resample until the ground-truth trace is finite
+            # (bounded flight envelope — the regime the paper evaluates).
+            for attempt in range(10):
+                key = jax.random.PRNGKey(seed + 1000 * attempt)
+                trace = simulate_batch(system, key, batch=4,
+                                       horizon=250 if quick else None,
+                                       noise_std=0.01)
+                if bool(np.isfinite(np.asarray(trace.ys)).all()):
+                    break
+            ds = WindowDataset.from_trace(trace.ys_noisy, trace.us, trace.dt,
+                                          window=24, stride=8)
+            per_model["merinda"].append(_mse_merinda(system, ds, key, steps))
+            per_model["emily"].append(_mse_emily(system, ds, key, steps))
+            per_model["pinn_sr"].append(
+                _mse_pinnsr(system, trace, ds, key, steps))
+        row = {"system": name}
+        for model, vals in per_model.items():
+            row[f"{model}_mse"] = round(float(np.mean(vals)), 4)
+            row[f"{model}_std"] = round(float(np.std(vals)), 4)
+        rows.append(row)
+    write_csv("table1_accuracy.csv", rows)
+    print_rows("Table I — reconstruction MSE (MERINDA vs EMILY vs PINN+SR)",
+               rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,99 @@
+"""Paper Table III: optimization-strategy ablation at dimension 30.
+
+FPGA configurations -> TPU-native analogues (DESIGN.md §2):
+    No Optimization   -> naive per-step GRU (separate gate matmuls, no
+                         hoisting) + per-step library RK4
+    Unroll            -> gate FUSION: z/r/c share fused [*,3H] matmuls
+                         (the paper's unrolled parallel MACs)
+    Pipeline + Unroll -> fusion + hoisted input projection (ONE big matmul
+                         for all timesteps) — the kernels/gru formulation
+                         whose Pallas kernel double-buffers batch tiles
+                         (PIPELINE II=1)
+
+Reports wall ms/step (CPU, relative speedups are the metric), matmul FLOPs,
+and the Pallas kernel's VMEM working set (BRAM analogue) for the fused
+config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_rows, time_fn, write_csv
+from repro.kernels.gru.ref import gru_scan_ref, init_gru_params
+
+DIM = 30           # paper's reference point
+B, T, H = 80, 16, 64
+D_IN = 4           # per-twin (3 states + elevator)
+
+
+def _naive(xs, h0, wx, wh, b):
+    Hh = h0.shape[-1]
+    wxz, wxr, wxc = wx[:, :Hh], wx[:, Hh:2 * Hh], wx[:, 2 * Hh:]
+    whz, whr, whc = wh[:, :Hh], wh[:, Hh:2 * Hh], wh[:, 2 * Hh:]
+    bz, br, bc = b[:Hh], b[Hh:2 * Hh], b[2 * Hh:]
+
+    def step(h, x_t):
+        z = jax.nn.sigmoid(x_t @ wxz + h @ whz + bz)
+        r = jax.nn.sigmoid(x_t @ wxr + h @ whr + br)
+        c = jnp.tanh(x_t @ wxc + (r * h) @ whc + bc)
+        return (1.0 - z) * h + z * c, None
+
+    return jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))[0]
+
+
+def _fused_gates(xs, h0, wx, wh, b):
+    """Gate fusion only: fused weight matmuls per step, input NOT hoisted."""
+    Hh = h0.shape[-1]
+
+    def step(h, x_t):
+        xp = x_t @ wx + b
+        hp = h @ wh[:, :2 * Hh]
+        z = jax.nn.sigmoid(xp[..., :Hh] + hp[..., :Hh])
+        r = jax.nn.sigmoid(xp[..., Hh:2 * Hh] + hp[..., Hh:])
+        c = jnp.tanh(xp[..., 2 * Hh:] + (r * h) @ wh[:, 2 * Hh:])
+        return (1.0 - z) * h + z * c, None
+
+    return jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))[0]
+
+
+def _hoisted(xs, h0, wx, wh, b):
+    return gru_scan_ref(xs, h0, wx, wh, b)[1]
+
+
+def run(quick: bool = True) -> list[dict]:
+    del quick
+    key = jax.random.PRNGKey(0)
+    p = init_gru_params(key, D_IN, H)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, T, D_IN))
+    h0 = jnp.zeros((B, H))
+
+    flops = 2 * B * T * (D_IN * 3 * H + H * 3 * H)
+    vmem_fused = 4 * (D_IN * 3 * H + H * 3 * H + 3 * H      # weights+bias
+                      + 8 * T * D_IN + 8 * T * 3 * H + 8 * H)  # one tile
+    configs = [
+        ("no_optimization", _naive),
+        ("unroll_gate_fusion", _fused_gates),
+        ("pipeline_unroll_hoisted", _hoisted),
+    ]
+    rows = []
+    base_ms = None
+    for name, fn in configs:
+        jf = jax.jit(lambda a, b2, f=fn: f(a, b2, p["wx"], p["wh"], p["b"]))
+        ms = time_fn(jf, xs, h0, warmup=2, repeats=5) * 1e3
+        base_ms = base_ms or ms
+        rows.append({
+            "configuration": name,
+            "ms_per_scan": round(ms, 3),
+            "speedup_vs_baseline": round(base_ms / ms, 2),
+            "matmul_flops": flops,
+            "vmem_working_set_bytes": vmem_fused
+            if name == "pipeline_unroll_hoisted" else "-",
+        })
+    write_csv("table3_ablation.csv", rows)
+    print_rows("Table III — optimization ablation (dim=30 analogue)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+# The paper's primary contribution: MERINDA model recovery (GRU neural-flow
+# replacement of NODE layers) plus the EMILY / PINN+SR baselines it is
+# evaluated against, and the fleet-twinning production layer.
+from repro.core.emily import Emily, EmilyConfig
+from repro.core.fleet import FleetConfig, FleetMerinda
+from repro.core.library import PolyLibrary, make_library, n_library_terms
+from repro.core.merinda import Merinda, MerindaConfig
+from repro.core.pinn_sr import PinnSR, PinnSRConfig
+from repro.core.sparse_regression import masked_ridge, stlsq
+from repro.core.trainer import FitResult, fit
+
+__all__ = [
+    "Emily", "EmilyConfig", "FleetConfig", "FleetMerinda", "PolyLibrary",
+    "make_library", "n_library_terms", "Merinda", "MerindaConfig", "PinnSR",
+    "PinnSRConfig", "masked_ridge", "stlsq", "FitResult", "fit",
+]

@@ -1,0 +1,147 @@
+"""Polynomial feature library for sparse model recovery.
+
+The recovered model has the form  dY/dt = Theta @ Phi(Y, U)  where Phi is a
+library of monomials of total degree <= `order` over the augmented variable
+vector  X~ = [1, Y_1..Y_n, U_1..U_m].
+
+Each library term is stored as `order` indices into X~ (index 0 is the
+constant 1), so evaluation is a gather + product — the exact formulation the
+fused RK4 Pallas kernel consumes (see kernels/rk4).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PolyLibrary", "make_library", "n_library_terms"]
+
+
+def n_library_terms(n_vars: int, order: int) -> int:
+    """Number of monomials of total degree <= order in n_vars variables.
+
+    Equals C(order + n_vars, n_vars) — the count quoted in the paper as
+    C(M + n, n).
+    """
+    return math.comb(order + n_vars, n_vars)
+
+
+@dataclass(frozen=True, eq=False)
+class PolyLibrary:
+    """A fixed polynomial library Phi over states Y (n dims) and inputs U (m dims).
+
+    Hash/eq are defined by (n, m, order) — the enumeration is deterministic —
+    so a PolyLibrary can be passed as a static jit argument.
+    """
+
+    n: int                      # state dimension |Y|
+    m: int                      # input dimension |U|
+    order: int                  # max total degree M
+    term_indices: np.ndarray    # [L, order] int32 indices into [1, Y, U]
+    names: tuple[str, ...] = field(default=())
+
+    def __hash__(self):
+        return hash((self.n, self.m, self.order))
+
+    def __eq__(self, other):
+        return (isinstance(other, PolyLibrary)
+                and (self.n, self.m, self.order) == (other.n, other.m, other.order))
+
+    @property
+    def size(self) -> int:
+        return int(self.term_indices.shape[0])
+
+    # ------------------------------------------------------------------ #
+    def eval(self, y, u=None):
+        """Evaluate Phi(Y, U) -> [..., L].
+
+        y: [..., n], u: [..., m] or None (when m == 0).
+        """
+        parts = [jnp.ones_like(y[..., :1]), y]
+        if self.m:
+            if u is None:
+                raise ValueError(f"library has m={self.m} inputs but u is None")
+            parts.append(u)
+        aug = jnp.concatenate(parts, axis=-1)                  # [..., 1+n+m]
+        idx = jnp.asarray(self.term_indices)                   # [L, order]
+        gathered = aug[..., idx]                               # [..., L, order]
+        return jnp.prod(gathered, axis=-1)                     # [..., L]
+
+    # ------------------------------------------------------------------ #
+    def term_name(self, j: int) -> str:
+        return self.names[j]
+
+    def coeff_dict(self, theta, state_names=None, atol: float = 1e-8):
+        """Render Theta [n, L] as {state: {term: coeff}} for interpretability."""
+        theta = np.asarray(theta)
+        state_names = state_names or [f"d{self._vname(i + 1)}/dt" for i in range(self.n)]
+        out = {}
+        for i in range(self.n):
+            row = {
+                self.names[j]: float(theta[i, j])
+                for j in range(self.size)
+                if abs(theta[i, j]) > atol
+            }
+            out[state_names[i]] = row
+        return out
+
+    def _vname(self, k: int) -> str:
+        if k == 0:
+            return "1"
+        if k <= self.n:
+            return f"y{k - 1}"
+        return f"u{k - 1 - self.n}"
+
+    # ------------------------------------------------------------------ #
+    def theta_from_terms(self, rows: list[dict[str, float]]) -> np.ndarray:
+        """Build a dense Theta [n, L] from per-state {term_name: coeff} dicts."""
+        if len(rows) != self.n:
+            raise ValueError(f"expected {self.n} rows, got {len(rows)}")
+        name_to_j = {nm: j for j, nm in enumerate(self.names)}
+        theta = np.zeros((self.n, self.size), dtype=np.float64)
+        for i, row in enumerate(rows):
+            for nm, c in row.items():
+                key = _canonical_name(nm)
+                if key not in name_to_j:
+                    raise KeyError(f"term {nm!r} (canonical {key!r}) not in library "
+                                   f"(n={self.n}, m={self.m}, order={self.order})")
+                theta[i, name_to_j[key]] = c
+        return theta
+
+
+def _canonical_name(name: str) -> str:
+    """Canonicalize 'y1*y0' -> 'y0*y1', '1' stays '1'."""
+    if name in ("1", ""):
+        return "1"
+    return "*".join(sorted(name.split("*")))
+
+
+def make_library(n: int, m: int = 0, order: int = 2) -> PolyLibrary:
+    """Enumerate all monomials of total degree <= order over [Y(n), U(m)].
+
+    Term j is the product of `order` entries of [1, Y, U]; lower-degree terms
+    pad with index 0 (the constant 1).  L = C(order + n + m, n + m).
+    """
+    n_vars = n + m
+    terms: list[tuple[int, ...]] = []
+    names: list[str] = []
+    # combinations_with_replacement over variable indices 0..n_vars-1 for each
+    # degree d, padded with the constant slot.
+    for d in range(order + 1):
+        for combo in itertools.combinations_with_replacement(range(1, n_vars + 1), d):
+            padded = combo + (0,) * (order - d)
+            terms.append(padded)
+            if d == 0:
+                names.append("1")
+            else:
+                def vname(k: int) -> str:
+                    return f"y{k - 1}" if k <= n else f"u{k - 1 - n}"
+                names.append("*".join(sorted(vname(k) for k in combo)))
+    term_indices = np.asarray(terms, dtype=np.int32)
+    lib = PolyLibrary(n=n, m=m, order=order, term_indices=term_indices,
+                      names=tuple(names))
+    assert lib.size == n_library_terms(n_vars, order)
+    return lib

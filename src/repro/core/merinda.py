@@ -1,0 +1,244 @@
+"""MERINDA: Model REcovery IN Dynamic Architectures (the paper's contribution).
+
+Architecture (paper Fig. 2):
+  windows of (Y, U)  ->  GRU-NN (V hidden units; the neural-flow replacement
+  of the NODE layer)  ->  pruned dense head (ReLU MLP mapping the V hidden
+  states to C(M+n, n) library coefficients, sparsified so only |Theta| outputs
+  stay active, plus q input-shift values)  ->  RK4 ODE solver
+  SOLVE(Y(0), Theta_est, U)  ->  Y_est;  ODE loss = MSE(Y, Y_est).
+
+Design notes:
+  * The dense head's final layer is zero-initialized so Theta_est starts at 0
+    and the RK4 integration starts on the data manifold (stable early
+    training — standard flow/NODE practice).
+  * Sparsification is magnitude top-|Theta| with a straight-through mask,
+    enabled after a warmup ("the dropout rate of |Theta|" in the paper);
+    an L1 penalty on the dense coefficients drives the survivors.
+  * Both hot blocks run through the kernel wrappers (kernels/gru, kernels/rk4)
+    with `use_pallas` selecting the TPU kernels or the jnp reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.library import PolyLibrary, make_library
+from repro.kernels.gru.ops import gru_scan
+from repro.kernels.gru.ref import init_gru_params
+from repro.kernels.rk4.ops import rk4_poly_solve
+
+__all__ = ["MerindaConfig", "Merinda"]
+
+
+@dataclass(frozen=True)
+class MerindaConfig:
+    n: int                      # state dim |Y|
+    m: int                      # input dim
+    order: int = 2              # library order M
+    hidden: int = 64            # GRU width V (paper's "V nodes")
+    head_hidden: int = 64       # dense-head hidden width
+    n_active: int = 8           # |Theta|: surviving coefficients after pruning
+    dt: float = 0.01
+    l1: float = 1e-3            # sparsity penalty on dense coefficients
+    theta_scale: float = 1.0    # output scale of the head (match coeff range)
+    collocation_weight: float = 1.0   # "network loss" (derivative residual)
+    use_pallas: bool = False
+    interpret: bool = True
+    learn_shift: bool = True    # the paper's q input-shift outputs
+
+    @property
+    def library(self) -> PolyLibrary:
+        return make_library(self.n, self.m, self.order)
+
+    def with_(self, **kw) -> "MerindaConfig":
+        return replace(self, **kw)
+
+
+class Merinda:
+    """Functional model: params are a plain pytree; all methods are pure."""
+
+    def __init__(self, cfg: MerindaConfig):
+        self.cfg = cfg
+        self.lib = cfg.library
+
+    # ------------------------------------------------------------------ #
+    def norm_stats(self, y_win, u_win):
+        """Dataset statistics: per-channel (mu, sigma) for the GRU input and
+        per-column library scales (phi_scale) for head-output conditioning.
+
+        Column scaling is the classic SINDy conditioning trick: the head
+        regresses coefficients of the UNIT-SCALE library, so its implicit
+        least-squares problem is well conditioned; physical coefficients are
+        theta_scaled / phi_scale.
+        """
+        xs = jnp.concatenate([y_win[:, :-1, :], u_win], axis=-1)
+        mu = xs.mean(axis=(0, 1))
+        sigma = xs.std(axis=(0, 1)) + 1e-6
+        phi = self.lib.eval(y_win[:, :-1, :], u_win if self.cfg.m else None)
+        phi_scale = jnp.sqrt(jnp.mean(jnp.square(phi), axis=(0, 1))) + 1e-6
+        return {"mu": mu, "sigma": sigma, "phi_scale": phi_scale}
+
+    def init(self, key, norm=None):
+        cfg = self.cfg
+        L = self.lib.size
+        kg, k1, k2 = jax.random.split(key, 3)
+        d_in = cfg.n + cfg.m
+        q = cfg.m if cfg.learn_shift else 0
+        # head input: [last hidden ; mean-pooled hidden] (richer summary of
+        # the V hidden states than the final state alone).
+        d_head = 2 * cfg.hidden
+        s1 = 1.0 / jnp.sqrt(d_head)
+        if norm is None:
+            norm = {"mu": jnp.zeros((d_in,)), "sigma": jnp.ones((d_in,)),
+                    "phi_scale": jnp.ones((L,))}
+        return {
+            "gru": init_gru_params(kg, d_in, cfg.hidden),
+            "head": {
+                "w1": jax.random.uniform(k1, (d_head, cfg.head_hidden),
+                                         minval=-s1, maxval=s1),
+                "b1": jnp.zeros((cfg.head_hidden,)),
+                # zero init: Theta_est starts at 0 -> stable integration.
+                "w2": jnp.zeros((cfg.head_hidden, cfg.n * L + q)),
+                "b2": jnp.zeros((cfg.n * L + q,)),
+            },
+            "norm": norm,
+        }
+
+    # ------------------------------------------------------------------ #
+    def encode(self, params, y_win, u_win):
+        """GRU-NN forward: windows -> dense coefficients + input shift.
+
+        y_win: [B, k+1, n] (k+1 samples; the extra sample is the target for
+        the final integration step), u_win: [B, k, m].
+        Returns (theta_dense [B, n, L], shift [B, m]).
+        """
+        cfg = self.cfg
+        L = self.lib.size
+        xs = jnp.concatenate([y_win[:, :-1, :], u_win], axis=-1)  # [B, k, n+m]
+        norm = jax.lax.stop_gradient(params["norm"])
+        xs = (xs - norm["mu"]) / norm["sigma"]
+        B = xs.shape[0]
+        h0 = jnp.zeros((B, cfg.hidden), xs.dtype)
+        g = params["gru"]
+        hs, hT = gru_scan(xs, h0, g["wx"], g["wh"], g["b"],
+                          use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        summary = jnp.concatenate([hT, hs.mean(axis=1)], axis=-1)
+        hd = params["head"]
+        h = jax.nn.relu(summary @ hd["w1"] + hd["b1"])
+        raw = (h @ hd["w2"] + hd["b2"]) * cfg.theta_scale
+        # head outputs unit-scale-library coefficients; rescale to physical.
+        theta_dense = (raw[..., :cfg.n * L].reshape(B, cfg.n, L)
+                       / norm["phi_scale"][None, None, :])
+        if cfg.learn_shift and cfg.m:
+            shift = raw[..., cfg.n * L:]
+        else:
+            shift = jnp.zeros((B, cfg.m), raw.dtype)
+        return theta_dense, shift
+
+    # ------------------------------------------------------------------ #
+    def sparsify(self, theta_dense, enable, phi_scale=None):
+        """Magnitude top-|Theta| mask with straight-through gradients.
+
+        Magnitudes are measured on the unit-scale library (|theta| *
+        phi_scale — each term's actual contribution), which is the
+        identifiability-correct ranking.  `enable` may be a traced boolean.
+        """
+        cfg = self.cfg
+        B, n, L = theta_dense.shape
+        scale = jnp.ones((L,)) if phi_scale is None else phi_scale
+        flat = theta_dense.reshape(B, n * L)
+        k = min(cfg.n_active, n * L)
+        # stop_gradient: the mask is a hard top-k selection (straight-through);
+        # gradients flow only through the kept coefficient values.
+        mag = jax.lax.stop_gradient(
+            jnp.abs(flat * jnp.tile(scale, (n,))[None, :]))
+        thresh = jnp.sort(mag, axis=-1)[:, -k][:, None]
+        mask = (mag >= thresh).astype(flat.dtype)
+        sparse = (flat * mask).reshape(B, n, L)
+        return jnp.where(enable, sparse, theta_dense)
+
+    # ------------------------------------------------------------------ #
+    def decode(self, theta, y0, u_win):
+        """SOLVE(Y(0), Theta, U): RK4-integrate the recovered model."""
+        cfg = self.cfg
+        return rk4_poly_solve(theta, y0, u_win, dt=cfg.dt, library=self.lib,
+                              use_pallas=cfg.use_pallas,
+                              interpret=cfg.interpret)
+
+    # ------------------------------------------------------------------ #
+    def forward(self, params, y_win, u_win, sparsify_enable=False):
+        theta_dense, shift = self.encode(params, y_win, u_win)
+        theta = self.sparsify(theta_dense, sparsify_enable,
+                              params["norm"]["phi_scale"])
+        u_eff = u_win + shift[:, None, :] if self.cfg.m else u_win
+        y_est = self.decode(theta, y_win[:, 0, :], u_eff)
+        return y_est, theta, theta_dense
+
+    # ------------------------------------------------------------------ #
+    def loss(self, params, batch, sparsify_enable=False):
+        """ODE loss (paper: MSE(Y, Y_est)) + network (collocation) loss + L1.
+
+        The collocation term matches Theta @ Phi(Y) against central-difference
+        derivatives of the window — the "network loss" the ODE loss is
+        appended to in the paper; it conditions the head long before the
+        integrated trajectories carry useful gradient signal.
+        """
+        cfg = self.cfg
+        y_win, u_win = batch
+        y_est, theta, theta_dense = self.forward(params, y_win, u_win,
+                                                 sparsify_enable)
+        ode_loss = jnp.mean(jnp.square(y_est - y_win))
+        # L1 on unit-scale-library coefficients (contribution magnitudes);
+        # relaxed 10x once the hard mask is active (shrinkage no longer needed
+        # for selection, only biases the survivors).
+        phi_scale = jax.lax.stop_gradient(params["norm"]["phi_scale"])
+        l1 = jnp.mean(jnp.abs(theta_dense * phi_scale[None, None, :]))
+        l1_w = jnp.where(sparsify_enable, 0.1 * cfg.l1, cfg.l1)
+        loss = ode_loss + l1_w * l1
+        coll = jnp.zeros(())
+        if cfg.collocation_weight:
+            dy_fd = (y_win[:, 2:, :] - y_win[:, :-2, :]) / (2.0 * cfg.dt)
+            y_mid = y_win[:, 1:-1, :]
+            u_mid = u_win[:, 1:, :]
+            phi = self.lib.eval(y_mid, u_mid if cfg.m else None)   # [B,k-1,L]
+            pred = jnp.einsum("bnl,bkl->bkn", theta, phi)
+            coll = jnp.mean(jnp.square(pred - dy_fd))
+            loss = loss + cfg.collocation_weight * coll
+        return loss, {"ode_loss": ode_loss, "l1": l1, "coll": coll,
+                      "theta_mean_abs": jnp.mean(jnp.abs(theta))}
+
+    # ------------------------------------------------------------------ #
+    def recover(self, params, y_win, u_win, polish: bool = True):
+        """Recover one global sparse model from all windows (median-pooled
+        coefficients, re-sparsified) — the deployed digital-twin estimate.
+
+        polish: refit coefficient VALUES on the network-identified support by
+        masked ridge regression against finite-difference derivatives
+        (standard in the MR literature; removes L1 shrinkage bias — the
+        support selection itself stays entirely MERINDA's).
+        """
+        from repro.core.sparse_regression import masked_ridge
+
+        theta_dense, _ = self.encode(params, y_win, u_win)
+        pooled = jnp.median(theta_dense, axis=0, keepdims=True)
+        theta = self.sparsify(pooled, True, params["norm"]["phi_scale"])[0]
+        if not polish:
+            return theta
+        cfg = self.cfg
+        dy = ((y_win[:, 2:, :] - y_win[:, :-2, :]) / (2.0 * cfg.dt)
+              ).reshape(-1, cfg.n)
+        y_mid = y_win[:, 1:-1, :].reshape(-1, cfg.n)
+        u_mid = u_win[:, 1:, :].reshape(y_mid.shape[0], cfg.m)
+        phi = self.lib.eval(y_mid, u_mid if cfg.m else None)
+        mask = (jnp.abs(theta) > 0).astype(theta.dtype)
+        return masked_ridge(phi, dy, mask)
+
+    # ------------------------------------------------------------------ #
+    def reconstruction_mse(self, theta, y_win, u_win):
+        """Table-I metric: MSE of re-integrated trajectories vs ground truth."""
+        B = y_win.shape[0]
+        theta_b = jnp.broadcast_to(theta[None], (B,) + theta.shape)
+        y_est = self.decode(theta_b, y_win[:, 0, :], u_win)
+        return jnp.mean(jnp.square(y_est - y_win))

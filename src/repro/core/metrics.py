@@ -1,0 +1,36 @@
+"""Shared MR evaluation metrics (Table I)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.library import PolyLibrary
+from repro.kernels.rk4.ops import rk4_poly_solve
+
+__all__ = ["reconstruction_mse", "coefficient_error"]
+
+
+def reconstruction_mse(lib: PolyLibrary, theta, y_win, u_win, dt: float
+                       ) -> float:
+    """Paper Table-I metric: re-integrate the recovered sparse model from
+    each window's initial condition and MSE against the measured window.
+    Identical protocol for MERINDA / EMILY / PINN+SR.
+
+    A mis-recovered polynomial model can DIVERGE under integration (cubic
+    terms); diverged trajectories are clamped to 10x the data envelope so a
+    bad model scores a large-but-finite MSE instead of NaN."""
+    B = y_win.shape[0]
+    theta = jnp.asarray(theta)
+    theta_b = jnp.broadcast_to(theta[None], (B,) + theta.shape)
+    y_est = rk4_poly_solve(theta_b, y_win[:, 0, :], u_win, dt=dt,
+                           library=lib)
+    bound = 10.0 * jnp.max(jnp.abs(y_win))
+    y_est = jnp.clip(jnp.nan_to_num(y_est, nan=bound, posinf=bound,
+                                    neginf=-bound), -bound, bound)
+    return float(jnp.mean(jnp.square(y_est - y_win)))
+
+
+def coefficient_error(theta, theta_true) -> float:
+    """Relative L2 error on the stacked coefficient matrix."""
+    num = jnp.linalg.norm(jnp.asarray(theta) - jnp.asarray(theta_true))
+    den = jnp.linalg.norm(jnp.asarray(theta_true)) + 1e-12
+    return float(num / den)

@@ -1,0 +1,84 @@
+"""Fixed-step ODE integrators in jax.lax, used by every MR pipeline stage.
+
+Three entry points:
+  * rk4_step / euler_step     — single-step updates
+  * integrate                 — scan a step fn over a precomputed input sequence
+  * poly_ode_integrate        — integrate dY = Theta @ Phi(Y, U) (the MERINDA
+                                decoder `SOLVE(Y(0), Theta, U)` block; the
+                                fused Pallas kernel in kernels/rk4 implements
+                                the same contract)
+
+All integrators use zero-order-hold inputs: u[t] is held constant across the
+step from t to t+1 (matching how the sampled input traces are generated).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["euler_step", "rk4_step", "integrate", "poly_ode_integrate"]
+
+
+def euler_step(f: Callable, y, u, dt):
+    return y + dt * f(y, u)
+
+
+def rk4_step(f: Callable, y, u, dt):
+    """Classic RK4 with zero-order-hold input."""
+    k1 = f(y, u)
+    k2 = f(y + 0.5 * dt * k1, u)
+    k3 = f(y + 0.5 * dt * k2, u)
+    k4 = f(y + dt * k3, u)
+    return y + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+
+
+_STEPPERS = {"rk4": rk4_step, "euler": euler_step}
+
+
+def integrate(f: Callable, y0, us, dt, method: str = "rk4",
+              substeps: int = 1):
+    """Integrate dy/dt = f(y, u) over a sampled input sequence.
+
+    Args:
+      f: rhs, f(y [..., n], u [..., m]) -> [..., n].
+      y0: [..., n] initial state.
+      us: [T, ..., m] input samples (u[t] held over step t -> t+1).
+      dt: sample interval.
+      substeps: integrator substeps per sample interval (>=1) for accuracy.
+
+    Returns:
+      ys: [T+1, ..., n] including y0 at index 0.
+    """
+    step = _STEPPERS[method]
+    h = dt / substeps
+
+    def body(y, u):
+        def sub(y, _):
+            return step(f, y, u, h), None
+        y, _ = jax.lax.scan(sub, y, None, length=substeps)
+        return y, y
+
+    yT, ys = jax.lax.scan(body, y0, us)
+    del yT
+    return jnp.concatenate([y0[None], ys], axis=0)
+
+
+@partial(jax.jit, static_argnames=("library", "method", "substeps"))
+def poly_ode_integrate(theta, y0, us, dt, *, library, method: str = "rk4",
+                       substeps: int = 1):
+    """Integrate the recovered polynomial model dY = Theta @ Phi(Y, U).
+
+    theta: [..., n, L] per-instance coefficients (batched model recovery),
+    y0: [..., n], us: [T, ..., m] (pass shape [T, ..., 0] when m == 0).
+    Returns ys [T+1, ..., n].
+
+    This is the reference semantics for kernels/rk4; see kernels/rk4/ref.py.
+    """
+    def rhs(y, u):
+        phi = library.eval(y, u if library.m else None)        # [..., L]
+        return jnp.einsum("...nl,...l->...n", theta, phi)
+
+    return integrate(rhs, y0, us, dt, method=method, substeps=substeps)

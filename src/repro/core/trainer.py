@@ -1,0 +1,73 @@
+"""Generic MR training loop (CPU-scale; the distributed LM loop lives in
+repro/train/loop.py).
+
+Handles: jit'd update step, sparsity-mask annealing (`sparsify_after`),
+NaN guards (restore last good params — the single-process analogue of the
+fault-tolerant restart), and loss history.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, adamw, apply_updates
+
+__all__ = ["FitResult", "fit"]
+
+
+@dataclass
+class FitResult:
+    params: Any
+    history: list = field(default_factory=list)
+    nan_restarts: int = 0
+
+
+def fit(model, params, batches: Iterator, *, steps: int,
+        optimizer: Optimizer | None = None, lr: float = 3e-3,
+        sparsify_after: float = 0.5, log_every: int = 0,
+        post_step: Callable | None = None) -> FitResult:
+    """Fit an MR model (Merinda / Emily / PinnSR — anything with .loss).
+
+    sparsify_after: fraction of `steps` after which the top-|Theta| mask is
+    enabled (the paper's pruning phase).
+    """
+    opt = optimizer or adamw(lr=lr)
+    opt_state = opt.init(params)
+
+    @partial(jax.jit, static_argnames=("sparsify",))
+    def update(params, opt_state, batch, sparsify: bool):
+        (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch, sparsify)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, aux
+
+    history = []
+    nan_restarts = 0
+    last_good = params
+    sparsify_step = int(steps * sparsify_after)
+    for step, batch in enumerate(batches):
+        if step >= steps:
+            break
+        sparsify = step >= sparsify_step
+        params, opt_state, loss, aux = update(params, opt_state, batch, sparsify)
+        lv = float(loss)
+        if not jnp.isfinite(loss):
+            # NaN guard: single-process restart-from-last-good.
+            params = last_good
+            opt_state = opt.init(params)
+            nan_restarts += 1
+            continue
+        last_good = params
+        history.append(lv)
+        if log_every and step % log_every == 0:
+            extras = {k: float(v) for k, v in aux.items()}
+            print(f"  step {step:5d}  loss {lv:.6f}  " +
+                  " ".join(f"{k}={v:.5f}" for k, v in extras.items()))
+        if post_step is not None:
+            params = post_step(step, params)
+    return FitResult(params=params, history=history, nan_restarts=nan_restarts)

@@ -1,0 +1,122 @@
+"""Data pipeline: windowing sampled traces into MR training batches.
+
+The paper forms batches of size S_B from temporal traces of (Y, U), yielding a
+3D tensor of size S_B x (|Y|+m) x k (we store it window-major as
+[S_B, k, |Y|+m] — the layout the GRU scan consumes; the content is identical).
+
+Includes a host-side prefetching iterator with a deadline — the straggler-
+mitigation hook used by the distributed trainer (a late batch is replaced by
+the next ready one rather than stalling the step; see
+distributed/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["WindowDataset", "make_windows", "PrefetchIterator"]
+
+
+def make_windows(ys: jnp.ndarray, us: jnp.ndarray, window: int,
+                 stride: int | None = None):
+    """Slice a trace (or batch of traces) into overlapping windows.
+
+    ys: [T+1, n] or [B, T+1, n]; us: [T, m] or [B, T, m].
+    Returns (y_win [N, k, n], u_win [N, k, m]) with k = window; each window's
+    u_win[t] is the input held during ys step t -> t+1, so integrating the
+    recovered model from y_win[:, 0] with u_win reproduces y_win.
+    """
+    if ys.ndim == 2:
+        ys, us = ys[None], us[None]
+    stride = stride or max(1, window // 2)
+    B, Tp1, n = ys.shape
+    m = us.shape[-1]
+    T = Tp1 - 1
+    starts = np.arange(0, T - window + 1, stride)
+    N = len(starts)
+    y_win = jnp.stack([ys[:, s:s + window + 1] for s in starts], 1)   # [B,N,k+1,n]
+    u_win = jnp.stack([us[:, s:s + window] for s in starts], 1)       # [B,N,k,m]
+    y_win = y_win.reshape(B * N, window + 1, n)
+    u_win = u_win.reshape(B * N, window, m)
+    return y_win, u_win
+
+
+@dataclass
+class WindowDataset:
+    """In-memory windowed dataset with shuffled minibatch iteration."""
+    y_win: jnp.ndarray   # [N, k+1, n]  (k+1 so targets include the full window)
+    u_win: jnp.ndarray   # [N, k, m]
+    dt: float
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.y_win.shape[0])
+
+    def norm_stats(self):
+        """Per-channel (mu, sigma) over [Y ; U] — feeds Merinda.init."""
+        xs = jnp.concatenate([self.y_win[:, :-1, :], self.u_win], axis=-1)
+        mu = xs.mean(axis=(0, 1))
+        sigma = xs.std(axis=(0, 1)) + 1e-6
+        return mu, sigma
+
+    def batches(self, key, batch_size: int, *, epochs: int = 1,
+                drop_remainder: bool = True) -> Iterator[tuple]:
+        n = self.n_windows
+        steps = n // batch_size if drop_remainder else -(-n // batch_size)
+        for _ in range(epochs):
+            key, sub = jax.random.split(key)
+            perm = jax.random.permutation(sub, n)
+            for s in range(steps):
+                idx = perm[s * batch_size:(s + 1) * batch_size]
+                yield self.y_win[idx], self.u_win[idx]
+
+    @staticmethod
+    def from_trace(ys, us, dt, window: int, stride: int | None = None,
+                   normalize: bool = False):
+        y_win, u_win = make_windows(ys, us, window, stride)
+        return WindowDataset(y_win=y_win, u_win=u_win, dt=dt)
+
+
+class PrefetchIterator:
+    """Background-thread prefetcher with a per-batch deadline.
+
+    If the producer misses `deadline_s` for a batch, the consumer records a
+    straggler event and keeps waiting only until the next batch is ready —
+    production behaviour is to surface the count so the trainer can switch to
+    stale-gradient mode (distributed/fault_tolerance.py).
+    """
+
+    def __init__(self, it: Iterator, depth: int = 2, deadline_s: float = 5.0):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._deadline = deadline_s
+        self.straggler_events = 0
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            item = self._q.get(timeout=self._deadline)
+        except queue.Empty:
+            self.straggler_events += 1
+            item = self._q.get()   # block until ready
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,101 @@
+"""Gradient compression for the data-parallel reduction.
+
+Two composable schemes (used before the DP all-reduce at 1000+-node scale,
+where the cross-pod DCN hop is ~10x slower than ICI):
+
+  * top-k sparsification with ERROR FEEDBACK (memory): each step sends only
+    the largest-|g| fraction per leaf; the residual is carried and added to
+    the next step's gradient, preserving convergence (Stich et al. 2018).
+  * int8 quantization: per-leaf symmetric scale, quantize -> dequantize.
+
+`Compressor.apply` is pure (error state threads through the train state
+under state["comp"]), so it lives inside the jitted train step; leaves are
+compressed elementwise which means the pattern shards trivially under pjit.
+The wire saving is realized when the launcher runs the DP reduction over the
+compressed representation (launch/train.py --compress; the dry-run §Perf log
+quantifies the collective-term delta).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressor", "topk_compressor", "int8_compressor",
+           "quantize_int8", "dequantize_int8"]
+
+PyTree = Any
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(x, keep_frac: float):
+    """Mask keeping the top `keep_frac` fraction of |x| entries."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(int(flat.size * keep_frac), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+@dataclass(frozen=True)
+class Compressor:
+    keep_frac: float | None = None      # top-k sparsification fraction
+    int8: bool = False
+
+    def init(self, grads: PyTree) -> PyTree:
+        if self.keep_frac is None:
+            return None
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def apply(self, grads: PyTree, err: PyTree | None):
+        """grads -> (compressed grads, new error state)."""
+        if self.keep_frac is not None:
+            if err is None:
+                err = self.init(grads)
+
+            def one(g, e):
+                corrected = g.astype(jnp.float32) + e
+                mask = _topk_mask(corrected, self.keep_frac)
+                sent = corrected * mask
+                return sent.astype(g.dtype), corrected - sent
+
+            out = jax.tree.map(one, grads, err)
+            grads = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            err = jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        if self.int8:
+            def q(g):
+                qq, s = quantize_int8(g)
+                return dequantize_int8(qq, s).astype(g.dtype)
+            grads = jax.tree.map(q, grads)
+        return grads, err
+
+    def wire_bytes_per_param(self) -> float:
+        """Modeled bytes/param on the DP reduction (for §Perf napkin math):
+        top-k sends (value+index) per kept entry; int8 sends 1 byte."""
+        value = 1.0 if self.int8 else 4.0
+        if self.keep_frac is not None:
+            return self.keep_frac * (value + 4.0)
+        return value
+
+
+def topk_compressor(keep_frac: float = 0.1, int8: bool = False) -> Compressor:
+    return Compressor(keep_frac=keep_frac, int8=int8)
+
+
+def int8_compressor() -> Compressor:
+    return Compressor(int8=True)

@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for the GRU scan: pads to hardware-aligned tiles and
+dispatches to the Pallas kernel (TPU) or the pure-jnp reference (CPU/dry-run).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gru.gru import gru_scan_pallas
+from repro.kernels.gru.ref import gru_scan_ref
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b"))
+def gru_scan(xs, h0, wx, wh, b, *, use_pallas: bool = False,
+             interpret: bool = True, block_b: int = 8):
+    """Fused GRU scan; see kernels/gru/ref.py for the math.
+
+    xs: [B, T, Din], h0: [B, H], wx: [Din, 3H], wh: [H, 3H], b: [3H]
+    -> (hs [B, T, H], hT [B, H])
+    """
+    if not use_pallas:
+        return gru_scan_ref(xs, h0, wx, wh, b)
+    xs_p, B = _pad_to(xs, 0, block_b)
+    h0_p, _ = _pad_to(h0, 0, block_b)
+    hs, hT = gru_scan_pallas(xs_p, h0_p, wx, wh, b,
+                             block_b=block_b, interpret=interpret)
+    return hs[:B], hT[:B]

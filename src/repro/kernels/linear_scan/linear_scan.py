@@ -1,0 +1,134 @@
+"""Chunked data-dependent-decay linear recurrence — Pallas TPU kernel.
+
+The recurrent-LM analogue of the paper's GRU strategy (DESIGN.md §5):
+  * ARRAY_PARTITION  -> the [K, V] state lives in a VMEM scratch for the
+    whole sequence; chunk inputs stream HBM->VMEM via the grid pipeline.
+  * PIPELINE II=1    -> grid = (B*H, N_chunks): while chunk n computes,
+    chunk n+1 DMAs in (Pallas double-buffering), and the B*H axis gives
+    embarrassing parallelism across cores.
+  * "make it MXU-shaped" -> intra-chunk work is two [C,K]x[K,C]-class
+    matmuls + one [C,C]x[C,V] matmul instead of T sequential rank-1 updates.
+
+Math identical to kernels/linear_scan/ref.py::linear_scan_chunked (the
+oracle); modes "ssd" (read-after-update) and "rwkv6" (read-before-update
+with bonus u).  All internal math f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["linear_scan_pallas"]
+
+
+def _ls_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+               state, *, chunk: int, mode: str):
+    n = pl.program_id(1)
+    C = chunk
+
+    @pl.when(n == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)                    # [C, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                    # [C, V]
+    w = w_ref[0].astype(jnp.float32)                    # [C, K] log decay
+
+    cw = jnp.cumsum(w, axis=0)                          # inclusive
+    row = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    if mode == "rwkv6":
+        cw_read = cw - w                                # exclusive
+        mask = col < row                                # strict causal
+    else:
+        cw_read = cw
+        mask = col <= row
+
+    # intra-chunk: P[t,s] = sum_k q[t,k] k[s,k] exp(cw_read[t,k] - cw[s,k])
+    diff = cw_read[:, None, :] - cw[None, :, :]         # [C, C, K]
+    D = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    P = jnp.einsum("tk,sk,tsk->ts", q, k, D)            # [C, C]
+    o = jnp.dot(P, v, preferred_element_type=jnp.float32)
+
+    if mode == "rwkv6":
+        u = u_ref[0].astype(jnp.float32)                # [K]
+        diag = jnp.sum(q * u[None, :] * k, axis=-1)     # [C]
+        o = o + diag[:, None] * v
+
+    # inter-chunk: read the carried state.
+    S_in = state[...]                                   # [K, V]
+    q_read = q * jnp.exp(cw_read)
+    o = o + jnp.dot(q_read, S_in, preferred_element_type=jnp.float32)
+
+    # state update: S_out = diag(A_end) S_in + sum_s diag(A_end/A_s) k_s v_s^T
+    A_end = jnp.exp(cw[-1, :])                          # [K]
+    kd = k * jnp.exp(cw[-1:, :] - cw)                   # [C, K]
+    dS = jnp.dot(kd.T, v, preferred_element_type=jnp.float32)
+    S_out = A_end[:, None] * S_in + dS
+    state[...] = S_out
+
+    o_ref[0] = o.astype(o_ref.dtype)
+    sf_ref[0] = S_out.astype(sf_ref.dtype)
+
+
+def linear_scan_pallas(q, k, v, w, u=None, *, mode: str = "ssd",
+                       chunk: int = 64, initial_state=None,
+                       interpret: bool = True):
+    """q, k, w: [B, H, T, K]; v: [B, H, T, V]; u: [H, K] or None.
+
+    Returns (o [B, H, T, V] f32, final_state [B, H, K, V] f32).
+    """
+    B, H, T, K = q.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        # zero-pad: w=0 (decay 1) and k=0 leave the carried state unchanged.
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v, w = zp(q), zp(k), zp(v), zp(w)
+    Tp = T + pad
+    N = Tp // C
+    BH = B * H
+
+    flat = lambda x: x.reshape(BH, Tp, x.shape[-1])
+    qf, kf, vf, wf = flat(q), flat(k), flat(v), flat(w)
+    if u is None:
+        uf = jnp.zeros((BH, K), jnp.float32)
+    else:
+        uf = jnp.broadcast_to(u[None, :, :], (B, H, K)).reshape(BH, K)
+    if initial_state is None:
+        s0 = jnp.zeros((BH, K, V), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32).reshape(BH, K, V)
+
+    grid = (BH, N)
+    kernel = functools.partial(_ls_kernel, chunk=C, mode=mode)
+    o, sf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, K), lambda i, n: (i, n, 0)),   # q
+            pl.BlockSpec((1, C, K), lambda i, n: (i, n, 0)),   # k
+            pl.BlockSpec((1, C, V), lambda i, n: (i, n, 0)),   # v
+            pl.BlockSpec((1, C, K), lambda i, n: (i, n, 0)),   # w
+            pl.BlockSpec((1, K), lambda i, n: (i, 0)),         # u (pinned)
+            pl.BlockSpec((1, K, V), lambda i, n: (i, 0, 0)),   # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, V), lambda i, n: (i, n, 0)),   # o
+            pl.BlockSpec((1, K, V), lambda i, n: (i, 0, 0)),   # final state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tp, V), jnp.float32),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, wf, uf, s0)
+    o = o.reshape(B, H, Tp, V)[:, :, :T]
+    return o, sf.reshape(B, H, K, V)

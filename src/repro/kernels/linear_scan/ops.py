@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the chunked linear recurrence (RWKV-6 / SSD).
+
+Dispatches to the Pallas TPU kernel or the pure-jnp chunked reference; both
+implement the identical chunk-parallel math (see ref.py docstring).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.linear_scan.ref import linear_scan_chunked
+
+__all__ = ["linear_scan"]
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk", "use_pallas", "interpret"))
+def linear_scan(q, k, v, w, u=None, *, mode: str = "ssd", chunk: int = 64,
+                initial_state=None, use_pallas: bool = False,
+                interpret: bool = True):
+    """q, k, w: [B, H, T, K]; v: [B, H, T, V]; u: [H, K] or None.
+
+    Returns (o [B, H, T, V] f32, final_state [B, H, K, V] f32).
+    """
+    if not use_pallas:
+        return linear_scan_chunked(q, k, v, w, u, mode=mode, chunk=chunk,
+                                   initial_state=initial_state)
+    from repro.kernels.linear_scan.linear_scan import linear_scan_pallas
+    return linear_scan_pallas(q, k, v, w, u, mode=mode, chunk=chunk,
+                              initial_state=initial_state,
+                              interpret=interpret)

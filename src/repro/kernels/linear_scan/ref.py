@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for the data-dependent-decay linear recurrence.
+
+Unified recurrence (covers RWKV-6 time-mix and Mamba-2 SSD):
+
+    S_t = diag(exp(w_t)) @ S_{t-1} + k_t^T v_t          S: [K, V]
+    mode "ssd"  :  o_t = q_t @ S_t                       (read after update)
+    mode "rwkv6":  o_t = q_t @ (S_{t-1} + diag(u) k_t^T v_t)
+                                                         (read before update,
+                                                          bonus u for current)
+
+Shapes: q, k, w: [B, H, T, K]; v: [B, H, T, V]; u (bonus): [H, K] or None.
+w is the LOG decay (<= 0).  initial_state: [B, H, K, V] or None (zeros).
+Both functions return (o [B, H, T, V] f32, final_state [B, H, K, V] f32).
+
+Two references:
+  * linear_scan_seq   — exact per-step lax.scan (the oracle)
+  * linear_scan_chunked — chunk-parallel formulation (intra-chunk masked
+    matmul + inter-chunk state carry).  This is the formulation the Pallas
+    kernel implements and the formulation the LM models run on the XLA path
+    (it is MXU-shaped: the paper's "make the recurrence matmul-sized" insight
+    applied to the assigned recurrent architectures).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["linear_scan_seq", "linear_scan_chunked"]
+
+
+def _seq_one(q, k, v, w, u, S0, mode: str):
+    """Single (b, h): q,k,w [T,K], v [T,V], u [K] or None, S0 [K,V]."""
+
+    def step(S, inp):
+        q_t, k_t, v_t, w_t = inp
+        kv = jnp.outer(k_t, v_t)
+        if mode == "rwkv6":
+            bonus = kv * u[:, None] if u is not None else kv
+            o_t = q_t @ (S + bonus)
+            S = jnp.exp(w_t)[:, None] * S + kv
+        else:  # ssd
+            S = jnp.exp(w_t)[:, None] * S + kv
+            o_t = q_t @ S
+        return S, o_t
+
+    S, os = jax.lax.scan(step, S0.astype(jnp.float32),
+                         (q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w.astype(jnp.float32)))
+    return os, S
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def linear_scan_seq(q, k, v, w, u=None, mode: str = "ssd",
+                    initial_state=None):
+    """Exact sequential oracle. Returns (o [B,H,T,V], S_final [B,H,K,V])."""
+    B, H, _, K = q.shape
+    V = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def per_head(h, args):
+        qq, kk, vv, ww, ss = args
+        uu = None if u is None else u[h]
+        return _seq_one(qq, kk, vv, ww, uu, ss, mode)
+
+    def per_batch(qb, kb, vb, wb, sb):
+        return jax.vmap(per_head)(jnp.arange(H), (qb, kb, vb, wb, sb))
+
+    return jax.vmap(per_batch)(q, k, v, w, initial_state)
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk"))
+def linear_scan_chunked(q, k, v, w, u=None, mode: str = "ssd",
+                        chunk: int = 64, initial_state=None):
+    """Chunk-parallel formulation; numerically stable (all decay factors are
+    exp of non-positive differences).  Matches linear_scan_seq to fp32
+    tolerance for any chunk size."""
+    B, H, T, K = q.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        zq = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v, w = zq(q), zq(k), zq(v), zq(w)
+    Tp = T + pad
+    N = Tp // C
+
+    f32 = jnp.float32
+    # One sequential scan over chunks: per-step working set is a single
+    # [B, H, C, C, K] decay tile (materializing all N chunks at once costs
+    # N x more and blew the 81-layer Mamba2 cells out of HBM — §Dry-run).
+    # Inputs keep their dtype; the f32 upcast happens on per-chunk tiles
+    # inside the (rematerialized) step.
+    qc = jnp.moveaxis(q.reshape(B, H, N, C, K), 2, 0)
+    kc = jnp.moveaxis(k.reshape(B, H, N, C, K), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, H, N, C, V), 2, 0)
+    wc = jnp.moveaxis(w.reshape(B, H, N, C, K), 2, 0).astype(f32)
+
+    if mode == "rwkv6":
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)  # strict causal
+    else:
+        mask = jnp.tril(jnp.ones((C, C), bool))
+    uf = None if u is None else u.astype(f32)
+
+    def chunk_step(S, inp):
+        qn, kn, vn, wn = inp                           # [B,H,C,K/V]
+        qn = qn.astype(f32)
+        kn = kn.astype(f32)
+        vn = vn.astype(f32)
+        cw = jnp.cumsum(wn, axis=-2)                   # inclusive log-decay
+        cw_read = cw - wn if mode == "rwkv6" else cw
+        # intra-chunk pair decays D[t,s,k] = exp(cw_read[t] - cw[s]), masked
+        diff = cw_read[..., :, None, :] - cw[..., None, :, :]  # [B,H,C,C,K]
+        D = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+        P = jnp.einsum("bhtk,bhsk,bhtsk->bhts", qn, kn, D)
+        o = P @ vn                                     # [B,H,C,V]
+        if mode == "rwkv6":
+            if uf is not None:
+                diag = jnp.einsum("bhtk,hk,bhtk->bht", qn, uf, kn)
+            else:
+                diag = jnp.einsum("bhtk,bhtk->bht", qn, kn)
+            o = o + diag[..., None] * vn
+        # inter-chunk: read carried state with decay since chunk start
+        q_read = qn * jnp.exp(cw_read)
+        o = o + jnp.einsum("bhck,bhkv->bhcv", q_read, S)
+        # state update
+        A_end = jnp.exp(cw[:, :, -1, :])               # [B,H,K]
+        kd = kn * jnp.exp(cw[:, :, -1:, :] - cw)
+        dS = jnp.einsum("bhck,bhcv->bhkv", kd, vn)
+        return A_end[..., None] * S + dS, o
+
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, K, V), f32)
+    else:
+        S0 = initial_state.astype(f32)
+    # remat the step: without it, backward saves every chunk's [B,H,C,C,K]
+    # decay tile simultaneously (1.75 GiB/layer on zamba2 — §Dry-run iter 3).
+    S_final, os = jax.lax.scan(jax.checkpoint(chunk_step), S0,
+                               (qc, kc, vc, wc))
+    o = jnp.moveaxis(os, 0, 2).reshape(B, H, Tp, V)
+    return o[:, :, :T], S_final

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the fused RK4 polynomial-ODE integrator."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.rk4.ref import rk4_poly_solve_ref
+from repro.kernels.rk4.rk4 import rk4_poly_solve_pallas, selection_matrices
+
+
+@partial(jax.jit, static_argnames=("dt", "library", "use_pallas", "interpret",
+                                   "block_b"))
+def rk4_poly_solve(theta, y0, us, *, dt: float, library,
+                   use_pallas: bool = False, interpret: bool = True,
+                   block_b: int = 8):
+    """Integrate dY = theta @ Phi(Y, u) for T steps.
+
+    theta: [B, n, L], y0: [B, n], us: [B, T, m] -> ys [B, T+1, n].
+    `library` is a repro.core.library.PolyLibrary (hashable static).
+    """
+    term_indices = np.asarray(library.term_indices)
+    if not use_pallas:
+        return rk4_poly_solve_ref(theta, y0, us, dt, term_indices)
+
+    # Pallas BlockSpecs cannot carry zero-width dims: for autonomous systems
+    # (m == 0) pad a dummy zero input channel; its selection row stays cold.
+    if library.m == 0:
+        us = jnp.zeros(us.shape[:2] + (1,), us.dtype)
+    sel = jnp.asarray(selection_matrices(term_indices,
+                                         1 + library.n + max(library.m, 1)))
+    B = theta.shape[0]
+    pad = (-B) % block_b
+    if pad:
+        theta = jnp.pad(theta, ((0, pad), (0, 0), (0, 0)))
+        y0 = jnp.pad(y0, ((0, pad), (0, 0)))
+        us = jnp.pad(us, ((0, pad), (0, 0), (0, 0)))
+    ys = rk4_poly_solve_pallas(theta, y0, us, dt, sel, block_b=block_b,
+                               interpret=interpret)
+    return ys[:B] if pad else ys

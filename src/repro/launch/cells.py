@@ -1,0 +1,191 @@
+"""Cell builders: one lowered program per (arch x shape x mesh).
+
+A *cell* is the unit of the multi-pod dry-run: for a given architecture,
+input shape, and mesh this module produces (fn, arg_specs, jit_kwargs) such
+that
+
+    jax.jit(fn, **jit_kwargs).lower(*arg_specs).compile()
+
+is the exact program the production launcher would execute:
+  * train_*   -> make_train_step(loss, opt, grad_accum) over sharded state
+  * prefill_* -> prefill emitting sequence-sharded caches
+  * decode_*  -> one-token decode_step against a donated, filled cache
+
+This module is import-safe on one device (no XLA_FLAGS hack; tests lower
+cells on small meshes); launch/dryrun.py is the 512-device CLI around it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, ArchSpec, Shape, get_arch
+from repro.distributed.sharding import (ShardingRules, axis_rules,
+                                        cache_shardings, logical_to_sharding,
+                                        param_shardings)
+from repro.models.zoo import ModelApi, build
+from repro.train.optimizer import adafactor, adamw
+from repro.train.train_state import make_train_step, state_specs
+
+__all__ = ["Cell", "build_cell", "lower_cell", "GRAD_ACCUM"]
+
+# Microbatching per arch for train_4k: keeps the live logits microbatch
+# ([B/ga, T, V/tp] f32) and MoE dispatch buffers inside HBM (see
+# EXPERIMENTS.md §Dry-run for the measured per-device bytes).
+GRAD_ACCUM = {
+    "gemma3-12b": 16,       # 262k vocab
+    "qwen3-8b": 8,          # 152k vocab
+    "chameleon-34b": 16,    # d_model 8192: layer-scan residual stack
+    "arctic-480b": 16,      # 1.9B params/chip at 256 chips: see EXPERIMENTS
+                            # (32 was tried: -2 GiB memory but 3.8x wire —
+                            # refuted; §Perf)
+    "mixtral-8x22b": 16,    # 56 layers x d 6144 residual stack
+    "starcoder2-15b": 8,    # d 6144 residual stack (40L)
+    "whisper-large-v3": 4,
+    "default": 4,
+}
+
+# Adafactor where AdamW's 8 bytes/param of moments cannot fit 16 GB/chip.
+ADAFACTOR_ARCHS = {"arctic-480b"}
+
+# Sequence-shard K/V during training (ring-attention-style): K/V heads (8)
+# cannot split over model=16, and the flash tiles + expert buffers leave no
+# headroom for replicated KV at 56 layers.  Costs ~10% wire; measured in
+# §Perf (mixtral hillclimb).
+SEQ_KV_ARCHS = {"mixtral-8x22b"}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: Shape
+    fn: Callable
+    arg_specs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    api: ModelApi
+    n_params: int
+    n_active_params: int
+    rules: ShardingRules | None = None   # per-cell act-rule overrides
+
+
+def _count_params(specs) -> tuple[int, int]:
+    """(total, active) param counts; MoE experts count top_k/E as active."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "experts" in names:
+            continue  # added below at active ratio
+        active += n
+    return total, active
+
+
+def _moe_active(api: ModelApi, total: int, dense_active: int) -> int:
+    cfg = api.cfg
+    if not cfg.n_experts:
+        return dense_active
+    expert_total = total - dense_active
+    return dense_active + expert_total * cfg.top_k // cfg.n_experts
+
+
+def _batch_shardings(rules, batch_specs):
+    def spec_of(leaf):
+        nd = leaf.ndim
+        return logical_to_sharding(P(("pod", "data"), *([None] * (nd - 1))),
+                                   rules.mesh, leaf.shape)
+    return jax.tree.map(spec_of, batch_specs)
+
+
+def _opt_for(arch: str, lr: float = 1e-4):
+    if arch in ADAFACTOR_ARCHS:
+        return adafactor(lr=lr)
+    return adamw(lr=lr, weight_decay=0.1)
+
+
+def build_cell(arch: str, shape_name: str, rules: ShardingRules,
+               *, grad_accum: int | None = None,
+               cfg_overrides: dict | None = None) -> Cell:
+    spec: ArchSpec = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in spec.skip_shapes:
+        raise ValueError(f"{arch} skips {shape_name}: "
+                         f"{spec.skip_shapes[shape_name]}")
+    cfg = spec.config
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    if arch in SEQ_KV_ARCHS:
+        act = dict(rules.act)
+        act["kv_bt"] = P(("pod", "data"), "model", None, None)
+        rules = ShardingRules(mesh=rules.mesh, act=act, params=rules.params)
+    B, T = shape.global_batch, shape.seq_len
+    api = build(cfg, max_position=T)
+    p_specs = api.param_specs()
+    p_shard = param_shardings(rules, p_specs)
+    total, dense_active = _count_params(p_specs)
+    active = _moe_active(api, total, dense_active)
+
+    if shape.kind == "train":
+        ga = grad_accum or GRAD_ACCUM.get(arch, GRAD_ACCUM["default"])
+        opt = _opt_for(arch)
+        # arctic: 1.9B params/chip — the f32 accumulation tree alone is
+        # 7.4 GiB/device; accumulate in bf16 (EXPERIMENTS.md §Dry-run it. 7).
+        accum_dtype = (jnp.bfloat16 if arch in ADAFACTOR_ARCHS
+                       else jnp.float32)
+        fn = make_train_step(api.loss, opt, grad_accum=ga,
+                             accum_dtype=accum_dtype)
+        s_specs = state_specs(p_specs, opt)
+        s_shard = param_shardings(rules, s_specs)
+        b_specs = api.batch_specs(B, T)
+        b_shard = _batch_shardings(rules, b_specs)
+        return Cell(arch, shape, fn, (s_specs, b_specs),
+                    (s_shard, b_shard), (s_shard, None), (0,), api,
+                    total, active, rules)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return api.prefill(params, batch, T)
+
+        b_specs = api.batch_specs(B, T)
+        b_shard = _batch_shardings(rules, b_specs)
+        c_specs = api.cache_specs(B, T)
+        c_shard = cache_shardings(rules, c_specs, batch=B)
+        logits_shard = logical_to_sharding(
+            P(("pod", "data"), "model"), rules.mesh, (B, cfg.vocab))
+        return Cell(arch, shape, fn, (p_specs, b_specs),
+                    (p_shard, b_shard), (c_shard, logits_shard), (), api,
+                    total, active, rules)
+
+    # decode: one new token against a cache of seq_len.
+    def fn(params, cache, tokens1):
+        return api.decode(params, cache, tokens1)
+
+    c_specs = api.cache_specs(B, T)
+    c_shard = cache_shardings(rules, c_specs, batch=B)
+    t_specs = jax.ShapeDtypeStruct((B,), np.int32)
+    t_shard = logical_to_sharding(P(("pod", "data")), rules.mesh, (B,))
+    logits_shard = logical_to_sharding(
+        P(("pod", "data"), "model"), rules.mesh, (B, cfg.vocab))
+    return Cell(arch, shape, fn, (p_specs, c_specs, t_specs),
+                (p_shard, c_shard, t_shard), (c_shard, logits_shard), (1,),
+                api, total, active, rules)
+
+
+def lower_cell(cell: Cell, rules: ShardingRules):
+    """Lower + compile under the mesh; returns (lowered, compiled)."""
+    rules = cell.rules or rules
+    with rules.mesh, axis_rules(rules):
+        jitted = jax.jit(cell.fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.arg_specs)
+        compiled = lowered.compile()
+    return lowered, compiled

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the multi-pod dry-run needs 512 host devices.
+# (Everything else in the repo sees the real single CPU device.)
+
+import argparse      # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import SHAPES, get_arch, list_archs            # noqa: E402
+from repro.distributed.sharding import ShardingRules              # noqa: E402
+from repro.launch.cells import build_cell, lower_cell             # noqa: E402
+from repro.launch.hlo_analysis import roofline_terms              # noqa: E402
+from repro.launch.hlo_walk import walk_hlo                        # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh            # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell this lowers + compiles the exact
+production program on the 16x16 single-pod mesh AND the 2x16x16 multi-pod
+mesh, prints memory_analysis() (proves it fits 16 GB/chip) and
+cost_analysis() (FLOPs/bytes for the roofline), parses the partitioned HLO
+for collective wire bytes, and writes one JSON per cell under
+artifacts/dryrun/.  launch/roofline.py renders the EXPERIMENTS.md tables
+from those JSONs.
+"""
+
+
+def _model_flops(cell, shape) -> float:
+    """MODEL_FLOPS convention: 6*N*D train, 2*N*D inference (N = active
+    params for MoE); attention flops excluded (recorded convention)."""
+    n = cell.n_active_params
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token/sample
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, save_hlo: bool = False,
+             grad_accum: int | None = None,
+             cfg_overrides: dict | None = None, tag_suffix: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh=mesh)
+    n_dev = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, rules, grad_accum=grad_accum,
+                      cfg_overrides=cfg_overrides)
+    lowered, compiled = lower_cell(cell, rules)
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+    }
+    mem["total_bytes"] = (mem["argument_bytes"] + mem["temp_bytes"]
+                          + mem["output_bytes"] - mem["alias_bytes"])
+    mem["fits_hbm"] = bool(mem["total_bytes"] <= HW.HBM_BYTES)
+
+    cost = compiled.cost_analysis()
+
+    # Trip-count-aware walk: XLA's cost_analysis counts while bodies once,
+    # which undercounts scanned layers/microbatches ~100x (see hlo_walk.py).
+    hlo = compiled.as_text()
+    walk = walk_hlo(hlo)
+    shape = SHAPES[shape_name]
+    terms = roofline_terms(
+        flops=walk.flops, bytes_accessed=walk.bytes,
+        wire_bytes=walk.wire_bytes,
+        model_flops_per_device=_model_flops(cell, shape) / n_dev,
+        peak_flops=HW.PEAK_BF16_FLOPS, hbm_bw=HW.HBM_BW, ici_bw=HW.ICI_BW)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "n_devices": n_dev,
+        "compile_s": round(compile_s, 1),
+        "n_params": cell.n_params, "n_active_params": cell.n_active_params,
+        "memory": mem,
+        "cost": {"flops": walk.flops, "bytes_accessed": walk.bytes,
+                 # raw XLA numbers kept for cross-checking (count while
+                 # bodies once):
+                 "xla_flops_once": float(cost.get("flops", 0.0)),
+                 "xla_bytes_once": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"per_op": walk.coll_per_op,
+                        "total_wire_bytes": walk.wire_bytes},
+        "whiles": sorted(walk.while_breakdown,
+                         key=lambda w: -w["flops"])[:12],
+        "warnings": walk.warnings[:10],
+        "roofline": terms,
+        "status": "ok",
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{rec['mesh']}{tag_suffix}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        with gzip.open(out_dir / f"{tag}.hlo.gz", "wt") as f:
+            f.write(hlo)
+    print(f"[dryrun] {tag}: compile {compile_s:.0f}s, "
+          f"mem/dev {mem['total_bytes'] / 2**30:.2f} GiB "
+          f"(fits={mem['fits_hbm']}), flops/dev {walk.flops:.3e}, "
+          f"wire {walk.wire_bytes / 2**20:.1f} MiB, "
+          f"dominant={terms['dominant']}, "
+          f"roofline_frac={terms['roofline_fraction']:.3f}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES), help="shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None,
+                    help="override grad accumulation (perf experiments)")
+    ap.add_argument("--cfg", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.cfg:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 host devices"
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        spec = get_arch(arch)
+        for shape_name in shapes:
+            if shape_name in spec.skip_shapes:
+                print(f"[dryrun] SKIP {arch} x {shape_name}: "
+                      f"{spec.skip_shapes[shape_name][:80]}...", flush=True)
+                continue
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape_name, multi_pod=mp,
+                             out_dir=out_dir, save_hlo=args.save_hlo,
+                             grad_accum=args.grad_accum,
+                             cfg_overrides=overrides or None,
+                             tag_suffix=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape_name} "
+                          f"(multi_pod={mp}): {e}", flush=True)
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+    if failures:
+        print(f"[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("   ", *f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+`compiled.as_text()` is the per-device (partitioned) module: shapes are LOCAL
+shards and cost_analysis()['flops'] is per-device work.  Collective wire
+bytes use ring-algorithm conventions per participating device:
+
+    all-reduce         2 * (g-1)/g * result_bytes
+    all-gather         (g-1)/g * result_bytes        (result = gathered)
+    reduce-scatter     (g-1)   * result_bytes        (result = one shard)
+    all-to-all         (g-1)/g * result_bytes
+    collective-permute result_bytes
+
+Group size g is parsed from replica_groups (explicit {{...}} or iota
+[n_groups, g]<=[N] form).  The collective roofline term divides total wire
+bytes by the per-chip ICI bandwidth — a deliberate single-link convention
+(recorded in EXPERIMENTS.md) so terms are comparable across cells.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["parse_collectives", "CollectiveStats", "roofline_terms"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[2,16]{1,0}' or '(f32[8]{0}, f32[8]{0})'."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        entries = [e for e in m.group(1).split(",") if e.strip() != ""]
+        return max(len(entries), 1)
+    return 1
+
+
+_WIRE = {
+    "all-reduce": lambda b, g: 2.0 * (g - 1) / g * b,
+    "all-gather": lambda b, g: (g - 1) / g * b,
+    "reduce-scatter": lambda b, g: float(g - 1) * b,
+    "all-to-all": lambda b, g: (g - 1) / g * b,
+    "collective-permute": lambda b, g: float(b),
+}
+
+
+@dataclass
+class CollectiveStats:
+    per_op: dict = field(default_factory=dict)   # op -> {count, bytes, wire}
+    total_wire_bytes: float = 0.0
+    total_result_bytes: float = 0.0
+
+    def as_dict(self):
+        return {"per_op": self.per_op,
+                "total_wire_bytes": self.total_wire_bytes,
+                "total_result_bytes": self.total_result_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        if g <= 1:
+            continue  # degenerate group: no wire traffic
+        wire = _WIRE[op](b, g)
+        rec = stats.per_op.setdefault(
+            op, {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0,
+                 "max_group": 0})
+        rec["count"] += 1
+        rec["result_bytes"] += b
+        rec["wire_bytes"] += wire
+        rec["max_group"] = max(rec["max_group"], g)
+        stats.total_wire_bytes += wire
+        stats.total_result_bytes += b
+    return stats
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   wire_bytes: float, model_flops_per_device: float,
+                   peak_flops: float, hbm_bw: float, ici_bw: float) -> dict:
+    """The three roofline terms (seconds, per device) + derived metrics."""
+    compute_t = flops / peak_flops
+    memory_t = bytes_accessed / hbm_bw
+    collective_t = wire_bytes / ici_bw
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dominant = max(terms, key=terms.get)
+    step_t = max(compute_t, memory_t, collective_t)
+    useful_t = model_flops_per_device / peak_flops
+    return {
+        **terms,
+        "dominant": dominant,
+        "step_time_s": step_t,
+        "model_flops_per_device": model_flops_per_device,
+        "useful_flop_ratio": (model_flops_per_device / flops
+                              if flops else 0.0),
+        "roofline_fraction": useful_t / step_t if step_t else 0.0,
+    }

@@ -1,0 +1,306 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's `compiled.cost_analysis()` counts every `while` body ONCE — with
+scan-over-layers + grad-accumulation scans that undercounts FLOPs,
+bytes, and collective traffic by the product of trip counts (~100x at the
+assigned shapes).  This walker re-derives the three roofline inputs from the
+partitioned HLO text, multiplying every while body by its
+`known_trip_count` annotation (present on all jax-emitted scans; fallback:
+the loop-condition compare constant, else 1 with a warning).
+
+Accounting conventions (recorded in EXPERIMENTS.md):
+  * flops: dots = 2*M*N*K from real operand shapes; elementwise /
+    transcendental ops = 1 flop per output element (inside fusions too).
+  * bytes: HBM traffic = operand+output bytes of every instruction at
+    "traffic level" (ENTRY, while/conditional bodies) — fusions count their
+    call-site I/O only, internal ops are register traffic.
+  * collectives: ring-algorithm wire bytes per device (see hlo_analysis).
+  * per-while breakdown kept for §Perf drill-downs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_analysis import _DTYPE_BYTES, _WIRE, _group_size
+
+__all__ = ["walk_hlo", "HloCost"]
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-zA-Z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>[^)]*)\)(?P<rest>.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^{]*\{\s*"n"\s*:\s*"(\d+)"')
+_CALLED_RE = {
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "true": re.compile(r"true_computation=%?([\w.\-]+)"),
+    "false": re.compile(r"false_computation=%?([\w.\-]+)"),
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "rsqrt", "sqrt", "cbrt", "power", "compare",
+    "select", "and", "or", "xor", "not", "sign", "floor", "ceil", "round",
+    "clamp", "atan2", "sine", "cosine", "remainder", "convert", "erf",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    # control flow: carried buffers are aliased in place; the real traffic
+    # is counted inside the bodies (slices/updates at trip multiplicity).
+    "while", "conditional", "call", "optimization-barrier",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = re.search(r"[a-z0-9]+\[([0-9,]*)\]", shape_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_per_op: dict = field(default_factory=dict)
+    while_breakdown: list = field(default_factory=list)
+    warnings: list = field(default_factory=list)
+
+    def add(self, other: "HloCost", mult: float = 1.0, with_bytes=True):
+        self.flops += mult * other.flops
+        if with_bytes:
+            self.bytes += mult * other.bytes
+        self.wire_bytes += mult * other.wire_bytes
+        for k, v in other.coll_per_op.items():
+            rec = self.coll_per_op.setdefault(
+                k, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+            for f in rec:
+                rec[f] += mult * v.get(f, 0.0)
+
+
+@dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list
+    rest: str
+
+
+def _operand_bytes(ins: _Instr, symtab: dict, i: int) -> int:
+    if i >= len(ins.operands):
+        return 0
+    return _shape_elems_bytes(symtab.get(ins.operands[i], ""))[1]
+
+
+def _traffic_bytes(ins: _Instr, symtab: dict, comps: dict,
+                   out_bytes: int) -> float:
+    """Approximate HBM traffic of one traffic-level instruction.
+
+    In-place/slicing ops touch only the slice region, not the whole buffer
+    (XLA aliases the carried buffer): counting whole operands would inflate
+    the memory term by the stacked-layer/cache factor (~50x measured).
+    """
+    op = ins.op
+    if op == "dynamic-slice" or op == "slice" or op == "gather":
+        return 2.0 * out_bytes                       # read slice + write
+    if op == "dynamic-update-slice":
+        return 2.0 * _operand_bytes(ins, symtab, 1)  # r/m/w of the region
+    if op == "scatter":
+        return 2.0 * _operand_bytes(ins, symtab, 2)
+    if op == "broadcast":
+        return float(out_bytes)
+    if op == "fusion":
+        total = float(out_bytes) + sum(
+            _operand_bytes(ins, symtab, i) for i in range(len(ins.operands)))
+        # correct for big aliased buffers sliced/updated INSIDE the fusion.
+        called = _CALLED_RE["calls"].search(ins.rest)
+        if called:
+            fsym = None
+            for fins in comps.get(called.group(1), []):
+                if fins.op in ("dynamic-update-slice", "dynamic-slice"):
+                    if fsym is None:
+                        fsym = {i2.name: i2.shape
+                                for i2 in comps[called.group(1)]}
+                    if fins.op == "dynamic-update-slice":
+                        full = _shape_elems_bytes(fins.shape)[1]
+                        upd = _operand_bytes(fins, fsym, 1)
+                        total -= max(0.0, 2.0 * (full - upd))
+                    else:
+                        buf = _operand_bytes(fins, fsym, 0)
+                        sl = _shape_elems_bytes(fins.shape)[1]
+                        total -= max(0.0, buf - sl)
+        return max(total, 0.0)
+    opd = sum(_operand_bytes(ins, symtab, i)
+              for i in range(len(ins.operands)))
+    return float(out_bytes + opd)
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    entry_name = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        if not s.startswith(" ") and s.endswith("{"):
+            m = _HDR_RE.match(s)
+            if m:
+                cur = []
+                comps[m.group("name")] = cur
+                if s.startswith("ENTRY"):
+                    entry_name = m.group("name")
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            ops = [o.strip().lstrip("%") for o in
+                   m.group("operands").split(",") if o.strip()]
+            cur.append(_Instr(m.group("name"), m.group("shape"),
+                              m.group("op"), ops, m.group("rest")))
+    comps["__entry__"] = comps.get(entry_name, [])
+    return comps
+
+
+def _dot_flops(ins: _Instr, symtab: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.shape)
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    if mc and ins.operands:
+        lhs_shape = symtab.get(ins.operands[0])
+        if lhs_shape is not None:
+            dims = _shape_dims(lhs_shape)
+            for ci in mc.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def walk_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    memo: dict[str, HloCost] = {}
+    top_warnings: list = []
+
+    def comp_cost(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()          # cycle guard (shouldn't happen)
+        cost = HloCost()
+        instrs = comps.get(name, [])
+        symtab = {i.name: i.shape for i in instrs}
+        for ins in instrs:
+            op = ins.op
+            out_elems, out_bytes = _shape_elems_bytes(ins.shape)
+            # --- flops ------------------------------------------------- #
+            if op == "dot":
+                cost.flops += _dot_flops(ins, symtab)
+            elif op in _ELEMENTWISE:
+                cost.flops += out_elems
+            elif op == "reduce" or op == "reduce-window":
+                # approx: one op per input element
+                in_elems = sum(_shape_elems_bytes(symtab.get(o, ""))[0]
+                               for o in ins.operands[:1])
+                cost.flops += in_elems
+            # --- control flow ------------------------------------------ #
+            if op == "while":
+                body = _CALLED_RE["body"].search(ins.rest)
+                cond = _CALLED_RE["condition"].search(ins.rest)
+                trip_m = _TRIP_RE.search(ins.rest)
+                trip = int(trip_m.group(1)) if trip_m else None
+                if trip is None:
+                    trip = 1
+                    cost.warnings.append(f"while {ins.name}: no trip count")
+                sub = HloCost()
+                if body:
+                    sub.add(comp_cost(body.group(1)))
+                if cond:
+                    sub.add(comp_cost(cond.group(1)))
+                cost.add(sub, mult=trip)
+                cost.while_breakdown.append(
+                    {"name": ins.name, "trip": trip,
+                     "body": body.group(1) if body else None,
+                     "flops": trip * sub.flops,
+                     "wire_bytes": trip * sub.wire_bytes})
+                cost.while_breakdown.extend(
+                    [dict(w) for w in sub.while_breakdown])
+            elif op == "fusion":
+                called = _CALLED_RE["calls"].search(ins.rest)
+                if called:
+                    # flops/collectives from inside; bytes = call-site I/O.
+                    cost.add(comp_cost(called.group(1)), with_bytes=False)
+            elif op == "conditional":
+                branches: list[str] = []
+                mb = _CALLED_RE["branches"].search(ins.rest)
+                if mb:
+                    branches = [b.strip().lstrip("%")
+                                for b in mb.group(1).split(",")]
+                else:
+                    for key in ("true", "false"):
+                        mm = _CALLED_RE[key].search(ins.rest)
+                        if mm:
+                            branches.append(mm.group(1))
+                if branches:
+                    worst = max((comp_cost(b) for b in branches),
+                                key=lambda c: c.flops)
+                    cost.add(worst)
+            elif op == "call":
+                called = _CALLED_RE["calls"].search(ins.rest)
+                if called:
+                    cost.add(comp_cost(called.group(1)))
+            # --- collectives -------------------------------------------- #
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                g = _group_size(ins.rest)
+                if g > 1:
+                    key = "all-to-all" if base == "ragged-all-to-all" else base
+                    wire = _WIRE[key](out_bytes, g)
+                    cost.wire_bytes += wire
+                    rec = cost.coll_per_op.setdefault(
+                        base, {"count": 0.0, "result_bytes": 0.0,
+                               "wire_bytes": 0.0})
+                    rec["count"] += 1
+                    rec["result_bytes"] += out_bytes
+                    rec["wire_bytes"] += wire
+            # --- bytes (traffic level only; fusion internals excluded by
+            #     the with_bytes=False above) ----------------------------- #
+            if op not in _NO_TRAFFIC:
+                cost.bytes += _traffic_bytes(ins, symtab, comps, out_bytes)
+        memo[name] = cost
+        return cost
+
+    total = HloCost()
+    total.add(comp_cost("__entry__"))
+    entry = memo.get("__entry__")
+    if entry:
+        total.while_breakdown = entry.while_breakdown
+        total.warnings = entry.warnings + top_warnings
+    return total

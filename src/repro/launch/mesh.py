@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests and benches must keep seeing 1 CPU
+device; only launch/dryrun.py forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 (256 chips) per pod; the multi-pod
+    variant prepends a 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+class HW:
+    """TPU v5e roofline constants (per chip)."""
+    PEAK_BF16_FLOPS = 197e12        # 197 TFLOP/s bf16
+    HBM_BW = 819e9                  # 819 GB/s
+    ICI_BW = 50e9                   # ~50 GB/s per link
+    HBM_BYTES = 16 * 1024 ** 3      # 16 GB
+    VMEM_BYTES = 128 * 1024 ** 2    # ~128 MB VMEM

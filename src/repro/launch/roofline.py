@@ -1,0 +1,78 @@
+"""Roofline report (deliverable g): renders EXPERIMENTS.md tables from the
+dry-run JSONs in artifacts/dryrun/.
+
+Usage:  PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+Writes artifacts/roofline.md (single-pod table per the assignment; multi-pod
+cells are listed in the dry-run pass/fail summary).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+__all__ = ["load_records", "render_table", "main"]
+
+
+def load_records(d: Path) -> list[dict]:
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    return sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def _fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def render_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    out = [
+        f"| arch | shape | compute | memory | collective | dominant | "
+        f"GiB/dev | fits | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["roofline"]
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_t(t['compute_s'])} | "
+            f"{_fmt_t(t['memory_s'])} | {_fmt_t(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s', '')} | "
+            f"{m['total_bytes'] / 2**30:.2f} | "
+            f"{'yes' if m['fits_hbm'] else 'NO'} | "
+            f"{t['useful_flop_ratio']:.3f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def render_summary(recs: list[dict]) -> str:
+    """Pass/fail matrix over meshes (the multi-pod proof)."""
+    cells: dict[tuple, set] = {}
+    for r in recs:
+        cells.setdefault((r["arch"], r["shape"]), set()).add(r["mesh"])
+    out = ["| arch | shape | 16x16 | 2x16x16 |", "|---|---|---|---|"]
+    for (a, s), meshes in sorted(cells.items()):
+        out.append(f"| {a} | {s} | "
+                   f"{'pass' if '16x16' in meshes else '—'} | "
+                   f"{'pass' if '2x16x16' in meshes else '—'} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline.md")
+    args = ap.parse_args()
+    recs = load_records(Path(args.dir))
+    doc = ["# Roofline table (single-pod 16x16, per-device terms)", "",
+           render_table(recs, "16x16"), "",
+           "# Multi-pod pass matrix", "", render_summary(recs), ""]
+    Path(args.out).write_text("\n".join(doc))
+    print("\n".join(doc))
+
+
+if __name__ == "__main__":
+    main()

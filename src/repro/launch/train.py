@@ -1,0 +1,122 @@
+"""End-to-end training driver.
+
+Two modes:
+  * --merinda <system>: the paper's pipeline — train a MERINDA digital twin
+    (or a fleet) on simulated traces of lotka_volterra / lorenz /
+    f8_crusader / pathogen, with checkpoint/restart.
+  * --arch <id> [--smoke]: LM training on the synthetic token stream.
+    --smoke uses the reduced config on CPU (the runnable path in this
+    container); the full config is exercised through launch/dryrun.py.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --merinda f8_crusader --steps 300
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.tokens import TokenStream
+from repro.distributed.compression import topk_compressor
+from repro.distributed.fault_tolerance import FailureInjector
+from repro.models.zoo import build
+from repro.train.loop import LoopConfig, run_loop
+from repro.train.optimizer import adamw, cosine_schedule
+from repro.train.train_state import init_state, make_train_step
+
+
+def train_lm(args) -> None:
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    api = build(cfg, max_position=args.seq_len)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}{' (smoke)' if args.smoke else ''}: "
+          f"{n_params:,} params")
+
+    opt = adamw(lr=cosine_schedule(args.lr, 10, args.steps), weight_decay=0.1)
+    compressor = (topk_compressor(args.compress) if args.compress else None)
+    step_fn = jax.jit(make_train_step(api.loss, opt,
+                                      grad_accum=args.grad_accum,
+                                      compressor=compressor))
+    state = init_state(params, opt)
+    if compressor is not None:
+        state["comp"] = compressor.init(params)
+
+    stream = TokenStream(vocab=cfg.vocab, batch=args.batch,
+                         seq_len=args.seq_len, seed=args.seed,
+                         d_frontend=cfg.d_model if api.is_encdec else None)
+    injector = (FailureInjector(fail_at_step=args.fail_at)
+                if args.fail_at is not None else None)
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every, injector=injector)
+    state, history = run_loop(step_fn, state, iter(stream), loop_cfg)
+    print(f"[train] done: loss {history[0]['loss']:.4f} -> "
+          f"{history[-1]['loss']:.4f} over {len(history)} steps")
+
+
+def train_merinda(args) -> None:
+    from repro.core.merinda import Merinda, MerindaConfig
+    from repro.core.trainer import fit
+    from repro.data.pipeline import WindowDataset
+    from repro.systems.simulate import simulate_batch
+    from repro.systems.simulate import register_systems
+
+    system = register_systems()[args.merinda]()
+    key = jax.random.PRNGKey(args.seed)
+    trace = simulate_batch(system, key, batch=8, noise_std=0.01)
+    ds = WindowDataset.from_trace(trace.ys_noisy, trace.us,
+                                  system.spec.dt, window=args.window)
+    true_theta = system.true_theta()
+    n_active = int((abs(true_theta) > 0).sum())
+    mcfg = MerindaConfig(n=system.spec.n, m=system.spec.m,
+                         order=system.spec.order, dt=system.spec.dt,
+                         hidden=args.hidden, n_active=n_active)
+    model = Merinda(mcfg)
+    params = model.init(key, model.norm_stats(ds.y_win, ds.u_win))
+    result = fit(model, params,
+                 ds.batches(key, args.batch, epochs=10_000),
+                 steps=args.steps, lr=args.lr, log_every=50)
+    theta = model.recover(result.params, ds.y_win, ds.u_win)
+    mse = float(model.reconstruction_mse(theta, ds.y_win, ds.u_win))
+    print(f"[train] {args.merinda}: reconstruction MSE {mse:.4f}, "
+          f"nan_restarts={result.nan_restarts}")
+    print(model.lib.coeff_dict(theta))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--merinda", default=None,
+                    help="system id: lotka_volterra|lorenz|f8_crusader|pathogen")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--window", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress", type=float, default=None,
+                    help="top-k gradient compression keep fraction")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a simulated preemption at this step")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.merinda:
+        train_merinda(args)
+    elif args.arch:
+        train_lm(args)
+    else:
+        raise SystemExit("pass --arch or --merinda")
+
+
+if __name__ == "__main__":
+    main()

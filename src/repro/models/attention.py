@@ -1,0 +1,332 @@
+"""Grouped-query attention: train/prefill (chunked-flash) and decode paths.
+
+Three execution strategies, chosen by static shape/window arguments:
+
+  * `flash_attention` — online-softmax scan over KV blocks (bounded memory,
+    the pure-JAX flash formulation).  Used for full/causal attention at any
+    sequence length; causal masking wastes <= 2x score FLOPs, negligible next
+    to the projection matmuls at the assigned shapes.
+  * `local_attention` — block-local sliding-window attention: each query
+    block of `window` tokens attends exactly its own + previous block
+    (compute O(T * window), the honest cost of SWA/local layers — no masked
+    full-T^2 waste).  Used by mixtral (window 4096) and gemma3 local layers
+    (window 1024).
+  * `decode_attention` — single-query attention against a KV cache, written
+    reduction-friendly so GSPMD turns sequence-sharded caches into
+    flash-decode (partial max/sum + all-reduce over the sequence shards).
+
+All paths are GQA-aware: KV heads are repeated logically via reshape of Q to
+[B, T, kv, group, dh] and einsums over the group axis (no materialized
+repeat_kv).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+__all__ = ["flash_attention", "local_attention", "decode_attention",
+           "attention_init", "attention_apply", "attention_decode"]
+
+NEG_INF = -1e30
+
+
+def _group_q(q, n_kv: int):
+    """[B, T, H, dh] -> [B, T, kv, G, dh] with G = H // kv."""
+    B, T, H, dh = q.shape
+    return q.reshape(B, T, n_kv, H // n_kv, dh)
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention: scan over KV blocks with online softmax.
+# --------------------------------------------------------------------------- #
+def flash_attention(q, k, v, *, causal: bool = True, kv_block: int = 1024,
+                    q_block: int = 1024, q_positions=None,
+                    kv_positions=None):
+    """q: [B, Tq, H, dh]; k, v: [B, Tk, kv, dh] -> [B, Tq, H, dh].
+
+    Double-blocked online softmax: outer scan over QUERY blocks, inner scan
+    over KV blocks.  Peak score memory is one [B, qb, kv, G, kb] tile, and
+    the residuals saved for backward are O(nq * nkv * qb * dh) carries
+    instead of O(Tq * Tk) — the formulation that keeps the 32k-prefill and
+    4k-train cells inside HBM (EXPERIMENTS.md §Dry-run iteration 2).
+    For causal attention, KV blocks strictly above a query block's diagonal
+    are skipped by masking-to-zero; the <=2x score-FLOP overshoot is
+    negligible next to the projection matmuls at the assigned shapes.
+    """
+    B, Tq, H, dh = q.shape
+    Tk, n_kv = k.shape[1], k.shape[2]
+    G = H // n_kv
+    scale = dh ** -0.5
+    kb_sz = min(kv_block, Tk)
+    qb_sz = min(q_block, Tq)
+    pad_k = (-Tk) % kb_sz
+    pad_q = (-Tq) % qb_sz
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Tq), (B, Tq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Tk), (B, Tk))
+    INT_MAX = jnp.iinfo(jnp.int32).max
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_k)),
+                               constant_values=INT_MAX)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)),
+                              constant_values=0)
+    nk = (Tk + pad_k) // kb_sz
+    nq = (Tq + pad_q) // qb_sz
+
+    # Big dots stay in the input dtype (bf16 at the assigned shapes): the
+    # TPU MXU accumulates f32 internally; forcing f32 HLO outputs makes the
+    # CPU legalizer hoist f32 copies of K/V out of the scan (§Dry-run iter 3).
+    # Softmax math happens in f32 on the per-tile score tensor only.
+    qg = _group_q(q, n_kv) * jnp.asarray(scale, q.dtype)
+    qb = qg.reshape(B, nq, qb_sz, n_kv, G, dh)
+    qpb = q_positions.reshape(B, nq, qb_sz)
+    kb = k.reshape(B, nk, kb_sz, n_kv, dh)
+    vb = v.reshape(B, nk, kb_sz, n_kv, dh)
+    pb = kv_positions.reshape(B, nk, kb_sz)
+
+    def q_step(_, q_in):
+        q_i, qp_i = q_in                                   # [B,qb,kv,G,dh]
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            k_j, v_j, p_j = kv_in
+            s = jnp.einsum("btkgd,bjkd->btkgj", q_i, k_j
+                           ).astype(jnp.float32)
+            mask = (p_j[:, None, :] <= qp_i[:, :, None] if causal
+                    else p_j[:, None, :] < INT_MAX)
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "btkgj,bjkd->btkgd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, qb_sz, n_kv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb_sz, n_kv, G), jnp.float32)
+        a0 = jnp.zeros((B, qb_sz, n_kv, G, dh), jnp.float32)
+        # checkpoint: backward recomputes each tile's scores instead of
+        # saving every [B, qb, kv, G, kb] probability tile.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+             jnp.moveaxis(pb, 1, 0)))
+        out_i = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out_i
+
+    _, out = jax.lax.scan(q_step, None,
+                          (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(qpb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Tq + pad_q, H, dh)
+    return out[:, :Tq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Block-local sliding-window attention (O(T * window) compute).
+# --------------------------------------------------------------------------- #
+def local_attention(q, k, v, *, window: int, q_positions=None):
+    """Causal sliding-window attention; token t attends (t-window, t].
+
+    Blocked at `window`: query block i attends key blocks i-1 and i, which
+    covers the window exactly; positions outside are masked.  Compute is
+    2 * T * window scores — the true cost of SWA.
+    """
+    B, T, H, dh = q.shape
+    n_kv = k.shape[2]
+    G = H // n_kv
+    scale = dh ** -0.5
+    w = min(window, T)
+    pad = (-T) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    N = Tp // w
+
+    qb = _group_q(q, n_kv).reshape(B, N, w, n_kv, G, dh)
+    kb = k.reshape(B, N, w, n_kv, dh)
+    vb = v.reshape(B, N, w, n_kv, dh)
+    # context = [previous block ; own block]  -> [B, N, 2w, kv, dh]
+    prev = lambda x: jnp.pad(x[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * 3)
+    kc = jnp.concatenate([prev(kb), kb], axis=2)
+    vc = jnp.concatenate([prev(vb), vb], axis=2)
+
+    qpos = jnp.arange(Tp).reshape(N, w)                       # [N, w]
+    kpos = jnp.concatenate([qpos - w, qpos], axis=1)          # [N, 2w]
+    mask = ((kpos[:, None, :] <= qpos[:, :, None])
+            & (kpos[:, None, :] > qpos[:, :, None] - w)
+            & (kpos[:, None, :] >= 0))                        # [N, w, 2w]
+
+    def blk(qi, ki, vi, mi):
+        s = jnp.einsum("btkgd,bjkd->btkgj",
+                       qi * jnp.asarray(scale, qi.dtype), ki
+                       ).astype(jnp.float32)
+        s = jnp.where(mi[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("btkgj,bjkd->btkgd", p.astype(vi.dtype), vi)
+
+    # scan over query blocks: bounds peak memory at one [B, w, kv, G, 2w] score
+    out = jax.lax.scan(
+        lambda _, x: (None, blk(*x)), None,
+        (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), mask))[1]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Tp, H, dh)[:, :T]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Decode: single query step against a cache.
+# --------------------------------------------------------------------------- #
+def decode_attention(q, k_cache, v_cache, kv_positions, q_position):
+    """q: [B, 1, H, dh]; caches [B, S, kv, dh]; kv_positions [B, S] (absolute,
+    MAX_INT for empty slots); q_position [B].
+
+    Written as separate max / exp / sum reductions over S so GSPMD lowers a
+    sequence-sharded cache to flash-decode (partial reductions + all-reduce).
+    The caches are NEVER upcast: the q*K and p*V dots run in the cache dtype
+    (an .astype(f32) here materialized a full f32 copy of every cache —
+    +10 GiB/device on whisper decode, §Dry-run iter 3); softmax runs in f32
+    on the [B, kv, G, S] score tensor.
+    """
+    B, _, H, dh = q.shape
+    n_kv = k_cache.shape[2]
+    G = H // n_kv
+    qg = (_group_q(q, n_kv)[:, 0]
+          * jnp.asarray(dh ** -0.5, q.dtype))                      # [B,kv,G,dh]
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(k_cache.dtype),
+                   k_cache).astype(jnp.float32)
+    valid = kv_positions <= q_position[:, None]                    # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache
+                     ).astype(jnp.float32)
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Full attention block (projections + rope + qk-norm + core + out proj)
+# --------------------------------------------------------------------------- #
+from repro.models.layers import (apply_qk_norm, apply_rope, dense, dense_init,
+                                 qk_norm_init)
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool = False, norm_kind: str = "rmsnorm",
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["qk_norm"] = qk_norm_init(head_dim, norm_kind, dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, *, positions, rope,
+                 rope_theta, rope_fraction, rope_interleaved, norm_kind):
+    B, T, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, T, n_heads, head_dim)
+    k = dense(params["wk"], x).reshape(B, T, n_kv, head_dim)
+    v = dense(params["wv"], x).reshape(B, T, n_kv, head_dim)
+    if "qk_norm" in params:
+        q, k = apply_qk_norm(params["qk_norm"], q, k, norm_kind)
+    if rope != "none":
+        q = apply_rope(q, positions, theta=rope_theta, fraction=rope_fraction,
+                       interleaved=rope_interleaved)
+        k = apply_rope(k, positions, theta=rope_theta, fraction=rope_fraction,
+                       interleaved=rope_interleaved)
+    return shard(q, "act_bthd"), shard(k, "kv_bt"), shard(v, "kv_bt")
+
+
+def attention_apply(params, x, *, n_heads, n_kv, head_dim, positions=None,
+                    causal=True, window=None, rope="neox", rope_theta=1e4,
+                    rope_fraction=1.0, rope_interleaved=False,
+                    norm_kind="rmsnorm", kv_block=1024, x_kv=None,
+                    return_kv=False):
+    """Train/prefill attention.  x_kv (cross-attention source) overrides the
+    KV input; window selects the block-local path."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    if x_kv is None:
+        q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim,
+                               positions=positions, rope=rope,
+                               rope_theta=rope_theta,
+                               rope_fraction=rope_fraction,
+                               rope_interleaved=rope_interleaved,
+                               norm_kind=norm_kind)
+    else:  # cross-attention: queries from x, keys/values from x_kv, no rope.
+        Tk = x_kv.shape[1]
+        q = dense(params["wq"], x).reshape(B, T, n_heads, head_dim)
+        k = dense(params["wk"], x_kv).reshape(B, Tk, n_kv, head_dim)
+        v = dense(params["wv"], x_kv).reshape(B, Tk, n_kv, head_dim)
+        q, k, v = shard(q, "act_bthd"), shard(k, "kv_bt"), shard(v, "kv_bt")
+    if window is not None and x_kv is None and causal:
+        out = local_attention(q, k, v, window=window)
+    else:
+        out = flash_attention(q, k, v, causal=causal and x_kv is None,
+                              kv_block=kv_block)
+    out = shard(out, "act_bthd")
+    y = dense(params["wo"], out.reshape(B, T, n_heads * head_dim))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(params, x, cache, *, n_heads, n_kv, head_dim, position,
+                     rope="neox", rope_theta=1e4, rope_fraction=1.0,
+                     rope_interleaved=False, norm_kind="rmsnorm",
+                     cache_kind="full", cross_kv=None):
+    """One-token decode.  cache = {"k","v","pos"}; position [B] absolute.
+
+    cache_kind "full": slot = position; "ring": slot = position % S (window
+    ring buffer — SWA/local layers keep only the last S tokens).
+    cross_kv: precomputed (k, v) encoder projections for cross-attention
+    (cache is not updated).
+    """
+    B = x.shape[0]
+    if cross_kv is not None:
+        q = dense(params["wq"], x).reshape(B, 1, n_heads, head_dim)
+        k_all, v_all = cross_kv
+        Tk = k_all.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(Tk), (B, Tk))
+        out = decode_attention(q, k_all, v_all, kv_pos,
+                               jnp.full((B,), Tk, jnp.int32))
+        y = dense(params["wo"], out.reshape(B, 1, n_heads * head_dim))
+        return y, cache
+
+    pos_b = jnp.broadcast_to(position[:, None], (B, 1))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim,
+                           positions=pos_b, rope=rope, rope_theta=rope_theta,
+                           rope_fraction=rope_fraction,
+                           rope_interleaved=rope_interleaved,
+                           norm_kind=norm_kind)
+    S = cache["k"].shape[1]
+    slot = position % S if cache_kind == "ring" else position
+    # per-sample dynamic_update_slice via vmap (slot differs across batch).
+    upd = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u.astype(c.dtype), (s, 0, 0)))
+    k_cache = upd(cache["k"], k, slot)
+    v_cache = upd(cache["v"], v, slot)
+    kv_pos = jax.vmap(lambda c, p, s: jax.lax.dynamic_update_slice(
+        c, p[None].astype(c.dtype), (s,)))(cache["pos"], position, slot)
+    out = decode_attention(q, k_cache, v_cache, kv_pos, position)
+    y = dense(params["wo"], out.reshape(B, 1, n_heads * head_dim))
+    return y, {"k": k_cache, "v": v_cache, "pos": kv_pos}

@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings [B, T_enc, d] (input_specs provides them).  The
+encoder is `cfg.enc_layers` bidirectional attention blocks over sinusoidal
+positions; the decoder is `cfg.n_layers` blocks of (causal self-attention +
+cross-attention + MLP) over a learned position table, with tied
+embed/unembed (Whisper convention).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models.kv_cache import _attn_entry
+from repro.models.layers import (apply_norm, embed_init, embed_lookup, mlp,
+                                 mlp_init, norm_init, sinusoidal_positions,
+                                 unembed)
+from repro.models.transformer import LMConfig, _fill_attn_cache
+
+__all__ = ["whisper_init", "whisper_param_specs", "whisper_encode",
+           "whisper_loss", "whisper_prefill", "whisper_decode_step",
+           "whisper_cache_init", "whisper_cache_specs"]
+
+
+def _enc_block_init(key, cfg: LMConfig):
+    ks = jax.random.split(key, 2)
+    dt = cfg.dtype
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dt),
+        "attn": attn.attention_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, False,
+                                    cfg.norm, dt),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt),
+    }
+
+
+def _dec_block_init(key, cfg: LMConfig):
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    a = lambda k: attn.attention_init(k, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim, False,
+                                      cfg.norm, dt)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dt),
+        "self": a(ks[0]),
+        "normx": norm_init(cfg.d_model, cfg.norm, dt),
+        "cross": a(ks[1]),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt),
+    }
+
+
+def whisper_init(cfg: LMConfig, key, max_position: int = 4096):
+    ks = jax.random.split(key, 5)
+    stack = lambda k, n, f: jax.vmap(f)(jax.random.split(k, n))
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "dec_pos": {"w": (jax.random.normal(ks[1],
+                                            (max_position, cfg.d_model),
+                                            jnp.float32) * 0.01
+                          ).astype(cfg.dtype)},
+        "enc_layers": stack(ks[2], cfg.enc_layers,
+                            lambda k: _enc_block_init(k, cfg)),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, cfg.dtype),
+        "dec_layers": stack(ks[3], cfg.n_layers,
+                            lambda k: _dec_block_init(k, cfg)),
+        "dec_norm": norm_init(cfg.d_model, cfg.norm, cfg.dtype),
+    }
+
+
+def whisper_param_specs(cfg: LMConfig, max_position: int = 4096):
+    return jax.eval_shape(
+        lambda: whisper_init(cfg, jax.random.PRNGKey(0), max_position))
+
+
+# --------------------------------------------------------------------------- #
+def _kw(cfg):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope="none", norm_kind=cfg.norm,
+                kv_block=cfg.kv_block)
+
+
+def whisper_encode(cfg: LMConfig, params, enc_x):
+    """enc_x: [B, T_enc, d] stub frame embeddings -> [B, T_enc, d]."""
+    B, T, _ = enc_x.shape
+    x = (enc_x.astype(cfg.dtype)
+         + sinusoidal_positions(T, cfg.d_model, cfg.dtype)[None])
+    x = shard(x, "act_btd")
+
+    def block(carry, p):
+        h = carry
+        a = attn.attention_apply(p["attn"],
+                                 apply_norm(p["norm1"], h, cfg.norm),
+                                 causal=False, **_kw(cfg))
+        h = h + a
+        h = h + mlp(p["ffn"], apply_norm(p["norm2"], h, cfg.norm),
+                    cfg.mlp_kind)
+        return shard(h, "act_btd"), None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_block(cfg, p, x, enc_out, positions):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    x = x + attn.attention_apply(p["self"], h, positions=positions,
+                                 causal=True, **_kw(cfg))
+    h = apply_norm(p["normx"], x, cfg.norm)
+    x = x + attn.attention_apply(p["cross"], h, x_kv=enc_out, **_kw(cfg))
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    x = x + mlp(p["ffn"], h, cfg.mlp_kind)
+    return shard(x, "act_btd")
+
+
+def whisper_decode_forward(cfg: LMConfig, params, tokens, enc_out):
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    x = x + params["dec_pos"]["w"][:T][None].astype(cfg.dtype)
+
+    def block(carry, p):
+        return _dec_block(cfg, p, carry, enc_out, positions), None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    return unembed(params["embed"], x)
+
+
+def whisper_loss(cfg: LMConfig, params, batch):
+    """batch: {"enc_x": [B, T_enc, d], "tokens": [B, T_dec]}."""
+    enc_out = whisper_encode(cfg, params, batch["enc_x"])
+    logits = whisper_decode_forward(cfg, params, batch["tokens"], enc_out)
+    logits, targets = logits[:, :-1], batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll, "aux": jnp.zeros(())}
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def whisper_cache_init(cfg: LMConfig, B: int, max_len: int, T_enc: int):
+    """Self-attn caches + precomputed cross K/V (filled by prefill)."""
+    L = cfg.n_layers
+    bc = lambda x: jnp.broadcast_to(x, (L,) + x.shape)
+    self_e = _attn_entry(cfg, B, max_len)
+    cross = {
+        "k": jnp.zeros((B, T_enc, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros((B, T_enc, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+    return {"self": jax.tree.map(bc, self_e),
+            "cross": jax.tree.map(bc, cross),
+            "pos": jnp.zeros((B,), jnp.int32)}
+
+
+def whisper_cache_specs(cfg, B, max_len, T_enc):
+    return jax.eval_shape(lambda: whisper_cache_init(cfg, B, max_len, T_enc))
+
+
+def whisper_prefill(cfg: LMConfig, params, batch, max_len: int):
+    """Encoder pass + decoder-prompt pass emitting self + cross caches."""
+    enc_out = whisper_encode(cfg, params, batch["enc_x"])
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    cache = whisper_cache_init(cfg, B, max_len, enc_out.shape[1])
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    x = x + params["dec_pos"]["w"][:T][None].astype(cfg.dtype)
+
+    def block(carry, inp):
+        h = carry
+        p, self_e = inp
+        a, (k, v) = attn.attention_apply(
+            p["self"], apply_norm(p["norm1"], h, cfg.norm),
+            positions=positions, causal=True, return_kv=True, **_kw(cfg))
+        h = h + a
+        self_e = _fill_attn_cache(self_e, k, v, positions)
+        # cross K/V are position-independent: computed once, stored.
+        hq = apply_norm(p["normx"], h, cfg.norm)
+        a, (xk, xv) = attn.attention_apply(p["cross"], hq, x_kv=enc_out,
+                                           return_kv=True, **_kw(cfg))
+        h = h + a
+        h = h + mlp(p["ffn"], apply_norm(p["norm2"], h, cfg.norm),
+                    cfg.mlp_kind)
+        cross_e = {"k": xk.astype(cfg.dtype), "v": xv.astype(cfg.dtype)}
+        return shard(h, "act_btd"), (self_e, cross_e)
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, (self_c, cross_c) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"]))
+    cache["self"], cache["cross"] = self_c, cross_c
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x[:, -1:, :])[:, 0]
+    return cache, logits
+
+
+def whisper_decode_step(cfg: LMConfig, params, cache, tokens1):
+    B = tokens1.shape[0]
+    position = cache["pos"]
+    x = embed_lookup(params["embed"], tokens1[:, None]).astype(cfg.dtype)
+    pos_emb = jnp.take(params["dec_pos"]["w"], position, axis=0)
+    x = x + pos_emb[:, None, :].astype(cfg.dtype)
+
+    def block(carry, inp):
+        # self-cache rides in the carry, updated in place at layer i
+        # (xs/ys cache threading doubles the cache footprint — §Dry-run
+        # iter 4).
+        h, self_c = carry
+        i, p, cross_e = inp
+        self_e = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            self_c)
+        a, self_e = attn.attention_decode(
+            p["self"], apply_norm(p["norm1"], h, cfg.norm), self_e,
+            position=position, rope="none", norm_kind=cfg.norm,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim)
+        h = h + a
+        a, _ = attn.attention_decode(
+            p["cross"], apply_norm(p["normx"], h, cfg.norm), None,
+            position=position, rope="none", norm_kind=cfg.norm,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            cross_kv=(cross_e["k"], cross_e["v"]))
+        h = h + a
+        h = h + mlp(p["ffn"], apply_norm(p["norm2"], h, cfg.norm),
+                    cfg.mlp_kind)
+        self_c = jax.tree.map(
+            lambda a2, u: jax.lax.dynamic_update_index_in_dim(
+                a2, u.astype(a2.dtype), i, 0),
+            self_c, self_e)
+        return (h, self_c), None
+
+    (x, self_c), _ = jax.lax.scan(
+        block, (x, cache["self"]),
+        (jnp.arange(cfg.n_layers), params["dec_layers"], cache["cross"]))
+    cache["self"] = self_c
+    cache["pos"] = position + 1
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    return cache, unembed(params["embed"], x)[:, 0]

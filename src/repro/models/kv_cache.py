@@ -1,0 +1,90 @@
+"""Decode caches for every block family.
+
+Shapes:
+  * "attn"/"global":  full cache   {"k","v": [B, S, kv, dh], "pos": [B, S]}
+  * "swa"/"local":    ring cache   same layout, S = window (slot = pos % S)
+  * "rwkv6":          {"tm_last","cm_last": [B, d], "wkv": [B, H, K, V]}
+  * "mamba2":         {"conv": [B, W-1, conv_dim], "ssm": [B, H, K, V]}
+  * shared block:     full cache at 2*d_model geometry, one per invocation.
+
+`pos` is initialized to INT32_MAX so empty slots are masked by the decode
+attention (kv_pos <= q_pos test).  Layout mirrors the param stacking: leaves
+under cache["layers"] carry a leading n_cycles axis so one lax.scan walks
+params and cache together.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cache_init", "cache_specs"]
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _attn_entry(cfg, B, S, *, n_kv=None, head_dim=None, dtype=None):
+    n_kv = n_kv if n_kv is not None else cfg.n_kv_heads
+    head_dim = head_dim if head_dim is not None else cfg.head_dim
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((B, S, n_kv, head_dim), dtype),
+        "v": jnp.zeros((B, S, n_kv, head_dim), dtype),
+        "pos": jnp.full((B, S), INT_MAX, jnp.int32),
+    }
+
+
+def _entry(cfg, kind: str, B: int, max_len: int):
+    if kind in ("attn", "global"):
+        return _attn_entry(cfg, B, max_len)
+    if kind in ("swa", "local"):
+        return _attn_entry(cfg, B, min(cfg.window, max_len))
+    if kind == "rwkv6":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "tm_last": jnp.zeros((B, cfg.d_model), cfg.dtype),
+            "cm_last": jnp.zeros((B, cfg.d_model), cfg.dtype),
+            "wkv": jnp.zeros((B, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32),
+        }
+    if kind == "mamba2":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((B, cfg.conv_width - 1, conv_dim), cfg.dtype),
+            "ssm": jnp.zeros((B, H, cfg.ssm_state, cfg.ssm_head_dim),
+                             jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _shared_entry(cfg, B, max_len):
+    d_in = 2 * cfg.d_model
+    return _attn_entry(cfg, B, max_len, n_kv=cfg.shared_n_heads,
+                       head_dim=d_in // cfg.shared_n_heads)
+
+
+def cache_init(cfg, B: int, max_len: int):
+    """Build the zeroed cache pytree for `decode_step`."""
+    p = len(cfg.pattern)
+    n_cyc, tail = cfg.cycles, cfg.tail
+
+    def group(n_blocks):
+        blocks = [_entry(cfg, cfg.pattern[i], B, max_len)
+                  for i in range(n_blocks)]
+        if cfg.shared_every:
+            return {"shared": _shared_entry(cfg, B, max_len),
+                    "blocks": blocks}
+        return blocks
+
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_cyc,) + x.shape), group(p))
+    cache = {"layers": stacked, "pos": jnp.zeros((B,), jnp.int32)}
+    if tail:
+        cache["tail"] = group(tail)
+    return cache
+
+
+def cache_specs(cfg, B: int, max_len: int):
+    """ShapeDtypeStruct tree (dry-run input spec)."""
+    return jax.eval_shape(lambda: cache_init(cfg, B, max_len))

@@ -1,0 +1,206 @@
+"""Shared neural-net layers for the assigned LM architectures.
+
+Pure-functional style matching repro.core: params are plain dict pytrees,
+every function is `f(params, x, ...) -> y`.  Initializers return the param
+tree; `jax.eval_shape` over them gives the allocation-free specs used by the
+multi-pod dry-run.
+
+Activation sharding is requested through `repro.distributed.sharding.shard`,
+which is a no-op outside an `axis_rules` context (so smoke tests and the
+MERINDA path never touch device state).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+__all__ = [
+    "dense_init", "dense", "norm_init", "apply_norm", "mlp_init", "mlp",
+    "embed_init", "embed_lookup", "unembed", "rope_frequencies", "apply_rope",
+    "sinusoidal_positions", "qk_norm_init", "apply_qk_norm",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Dense / projections
+# --------------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    """Truncated-normal fan-in init (MaxText/T5 style)."""
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+         * s).astype(dtype)
+    return {"w": w}
+
+
+def dense(params, x):
+    """x: [..., d_in] @ w [d_in, d_out] in the input dtype.
+
+    No preferred_element_type=f32 here: on the TPU target the MXU
+    accumulates in f32 regardless; forcing an f32 HLO output makes the CPU
+    legalizer hoist f32 CONVERTS of entire stacked weight arrays out of the
+    layer scan (measured +2-15 GiB/device in the dry-run — §Dry-run iter 3).
+    f32 math is applied explicitly where it matters (norms, softmax, logits).
+    """
+    return jnp.matmul(x, params["w"])
+
+
+# --------------------------------------------------------------------------- #
+# Normalization
+# --------------------------------------------------------------------------- #
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    """RMSNorm / LayerNorm in f32 (numerics) cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = ((xf - mu) * jax.lax.rsqrt(var + eps)
+             * params["scale"].astype(jnp.float32)
+             + params["bias"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def qk_norm_init(head_dim: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    """Per-head q/k norms (qwen3 / gemma3 RMS, chameleon LayerNorm)."""
+    return {"q": norm_init(head_dim, kind, dtype),
+            "k": norm_init(head_dim, kind, dtype)}
+
+
+def apply_qk_norm(params, q, k, kind: str = "rmsnorm"):
+    return (apply_norm(params["q"], q, kind), apply_norm(params["k"], k, kind))
+
+
+# --------------------------------------------------------------------------- #
+# MLP (swiglu / geglu / gelu / relu2)
+# --------------------------------------------------------------------------- #
+_GATED = {"swiglu": jax.nn.silu, "geglu": lambda x: jax.nn.gelu(x, approximate=True)}
+_PLAIN = {"gelu": lambda x: jax.nn.gelu(x, approximate=True),
+          "relu2": lambda x: jnp.square(jax.nn.relu(x))}
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if kind in _GATED:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, kind: str = "swiglu"):
+    """Position-wise FFN.  Hidden activation sharded over the model axis."""
+    if kind in _GATED:
+        h = _GATED[kind](dense(params["gate"], x)) * dense(params["up"], x)
+    else:
+        h = _PLAIN[kind](dense(params["up"], x))
+    h = shard(h, "act_ffn")
+    return dense(params["down"], h)
+
+
+# --------------------------------------------------------------------------- #
+# Embeddings
+# --------------------------------------------------------------------------- #
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    w = (jax.random.normal(key, (vocab, d_model), jnp.float32)
+         * (1.0 / math.sqrt(d_model))).astype(dtype)
+    return {"w": w}
+
+
+def embed_lookup(params, tokens):
+    """tokens [..] int32 -> [.., d].
+
+    Under sharding rules the lookup is a one-hot MATMUL: a gather from the
+    vocab-sharded table makes GSPMD replicate the whole table ("involuntary
+    full rematerialization", 2-4 GiB/device for the 262k vocabs); the
+    one-hot contraction keeps the table sharded and reduces with one psum
+    (and its transpose is the exact embedding-gradient scatter).  On a
+    single device the plain gather is used.
+    """
+    from repro.distributed.sharding import active_rules
+    w = params["w"]
+    rules = active_rules()
+    model_size = (rules.mesh.shape.get("model", 1)
+                  if rules is not None else 1)
+    if rules is None or w.shape[0] % model_size != 0:
+        # non-divisible vocab (whisper 51866): the table is replicated by
+        # the param rules, so a plain gather is local; the one-hot path
+        # would materialize a full [B, T, V] one-hot before resharding.
+        return shard(jnp.take(w, tokens, axis=0), "act_btd")
+    oh = jax.nn.one_hot(tokens, w.shape[0], dtype=w.dtype)
+    oh = shard(oh, "act_btv")
+    out = jnp.matmul(oh, w)        # exact: one-hot selects, no accumulation
+    return shard(out, "act_btd")
+
+
+def unembed(params, x, scale: float | None = None):
+    """x [.., d] -> logits [.., V] (f32).  V sharded over 'model'."""
+    logits = jnp.matmul(x, params["w"].T, preferred_element_type=jnp.float32)
+    if scale is not None:
+        logits = logits * scale
+    return shard(logits, "act_btv")
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings (neox, partial/interleaved, none)
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, theta: float = 1e4, fraction: float = 1.0,
+               interleaved: bool = False):
+    """x: [B, T, H, dh], positions: [B, T] (absolute token positions).
+
+    fraction < 1 rotates only the first `fraction * dh` dims (chatglm3's 2d
+    RoPE applies rotary to half the head dims); `interleaved` pairs (0,1),
+    (2,3), ... (GLM/GPT-J style) instead of neox half-splitting.
+    """
+    dh = x.shape[-1]
+    inv, rot = rope_frequencies(dh, theta, fraction)
+    ang = positions[..., None].astype(jnp.float32) * inv        # [B, T, rot/2]
+    # angles/trig in f32 (small [B, T, rot/2] tables); the rotation itself
+    # in the input dtype — full-width f32 rotation materialized 2 GiB/layer
+    # of transient q/k copies at 32k prefill (§Dry-run iter 3).
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rot], x[..., rot:]
+    if interleaved:
+        x1, x2 = xr[..., 0::2], xr[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    else:
+        half = rot // 2
+        x1, x2 = xr[..., :half], xr[..., half:]
+        rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                                  axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(T: int, d: int, dtype=jnp.float32):
+    """Whisper-encoder style fixed sinusoidal position table [T, d]."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = jnp.arange(T, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

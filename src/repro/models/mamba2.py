@@ -1,0 +1,153 @@
+"""Mamba-2 block (SSD — state-space duality) for the Zamba2 hybrid.
+
+Sequence execution maps the SSD recurrence
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t ,   y_t = C_t . S_t + D * x_t
+onto the shared chunked linear recurrence (kernels/linear_scan, mode "ssd"):
+    k_t = B_t (broadcast over heads), v_t = dt_t * x_t, w_t = log a_t,
+    q_t = C_t.
+Decode is the exact O(1)-state step with a rolling causal-conv window.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.models.layers import apply_norm, dense, dense_init, norm_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "mamba2_state_init"]
+
+
+def _dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, d_model: int, *, state: int = 64, head_dim: int = 64,
+                expand: int = 2, conv_width: int = 4, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = _dims(d_model, expand, head_dim, state)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * state + n_heads     # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv": {  # depthwise causal conv over (x, B, C)
+            "w": (jax.random.normal(ks[1], (conv_width, conv_dim), jnp.float32)
+                  / math.sqrt(conv_width)).astype(dtype),
+            "b": jnp.zeros((conv_dim,), dtype),
+        },
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (n_heads,), jnp.float32,
+                math.log(1e-3), math.log(1e-1))))).astype(dtype),
+        "norm": norm_init(d_inner, "rmsnorm", dtype),
+        "out_proj": dense_init(ks[3], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(w, b, x, init=None):
+    """Depthwise causal conv: x [B, T, C], w [W, C].  init: [B, W-1, C] tail
+    of the previous segment (zeros at sequence start)."""
+    W = w.shape[0]
+    B, T, C = x.shape
+    if init is None:
+        init = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([init, x], axis=1)
+    out = sum(xp[:, i:i + T, :] * w[i] for i in range(W)) + b
+    return jax.nn.silu(out), xp[:, T:, :]                 # new conv tail
+
+
+def _split_proj(zxbcdt, d_inner, state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def mamba2_apply(p, x, *, state: int = 64, head_dim: int = 64,
+                 expand: int = 2, conv_width: int = 4, ssm_state=None,
+                 conv_state=None, chunk: int = 64, use_pallas=False,
+                 interpret=True):
+    """x: [B, T, d] -> (y, (new_conv_state, new_ssm_state))."""
+    B, T, d = x.shape
+    d_inner, n_heads, conv_dim = _dims(d, expand, head_dim, state)
+    zxbcdt = dense(p["in_proj"], x)
+    zxbcdt = shard(zxbcdt, "act_ffn")
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, state, n_heads)
+
+    xbc, new_conv = _causal_conv(p["conv"]["w"], p["conv"]["b"], xbc,
+                                 conv_state)
+    xs = xbc[..., :d_inner]
+    Bt = xbc[..., d_inner:d_inner + state]
+    Ct = xbc[..., d_inner + state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B, T, H]
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt      # log decay
+
+    # map to the unified recurrence: [B, H, T, K/V]
+    q = jnp.broadcast_to(Ct[:, None], (B, n_heads, T, state))
+    k = jnp.broadcast_to(Bt[:, None], (B, n_heads, T, state))
+    v = (xs.reshape(B, T, n_heads, head_dim)
+         * dt[..., None].astype(xs.dtype)).transpose(0, 2, 1, 3)
+    w = jnp.broadcast_to(a_log.transpose(0, 2, 1)[..., None],
+                         (B, n_heads, T, state))
+    v = shard(v, "act_bhtd")
+
+    o, new_ssm = linear_scan(q, k, v, w, mode="ssd", chunk=chunk,
+                             initial_state=ssm_state,
+                             use_pallas=use_pallas, interpret=interpret)
+    y = o.transpose(0, 2, 1, 3).reshape(B, T, d_inner).astype(x.dtype)
+    y = y + xs * jnp.repeat(p["D"], head_dim)[None, None, :]
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return dense(p["out_proj"], y), (new_conv, new_ssm)
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+def mamba2_state_init(batch: int, d_model: int, *, state: int = 64,
+                      head_dim: int = 64, expand: int = 2,
+                      conv_width: int = 4, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = _dims(d_model, expand, head_dim, state)
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, state, head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x1, mstate, *, state: int = 64, head_dim: int = 64,
+                  expand: int = 2, conv_width: int = 4):
+    """x1: [B, d] -> (y [B, d], new_state)."""
+    B, d = x1.shape
+    d_inner, n_heads, conv_dim = _dims(d, expand, head_dim, state)
+    zxbcdt = dense(p["in_proj"], x1)
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, state, n_heads)
+
+    conv_in = jnp.concatenate([mstate["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv"]["w"]
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in, w) + p["conv"]["b"])
+    new_conv = conv_in[:, 1:, :]
+
+    xs = xbc[..., :d_inner]
+    Bt = xbc[..., d_inner:d_inner + state].astype(jnp.float32)
+    Ct = xbc[..., d_inner + state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B, H]
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)     # [B, H]
+
+    xh = xs.reshape(B, n_heads, head_dim).astype(jnp.float32)
+    dBx = (dt[..., None, None] * Bt[:, None, :, None]
+           * xh[:, :, None, :])                                    # [B,H,K,V]
+    new_ssm = a[..., None, None] * mstate["ssm"] + dBx
+    y = jnp.einsum("bk,bhkv->bhv", Ct, new_ssm)
+    y = y.reshape(B, d_inner).astype(x1.dtype)
+    y = y + xs * jnp.repeat(p["D"], head_dim)[None, :]
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return dense(p["out_proj"], y), {"conv": new_conv, "ssm": new_ssm}

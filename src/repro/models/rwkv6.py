@@ -1,0 +1,178 @@
+"""RWKV-6 "Finch" block: data-dependent token-shift + decay time-mix, and
+squared-ReLU channel-mix.
+
+Sequence execution uses the chunked linear recurrence (kernels/linear_scan,
+mode "rwkv6" — read-before-update with bonus u), i.e. the MXU-shaped
+formulation; decode is the exact O(1)-state per-step update.  This family is
+the direct beneficiary of the paper's acceleration principle (DESIGN.md
+§Arch-applicability).
+
+Simplification vs reference RWKV-6 (recorded): the five ddlerp token-shift
+mixes (w,k,v,r,g) share one two-layer LoRA producing all five deltas, matching
+the official parameter count and dataflow shape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.models.layers import apply_norm, dense, dense_init, norm_init
+
+__all__ = ["rwkv6_init", "rwkv6_time_mix", "rwkv6_channel_mix",
+           "rwkv6_time_mix_decode", "rwkv6_channel_mix_decode",
+           "rwkv6_state_init"]
+
+_TM_LORA = 32
+_DECAY_LORA = 64
+
+
+def rwkv6_init(key, d_model: int, head_dim: int = 64, d_ff: int = 0,
+               dtype=jnp.float32):
+    H = d_model // head_dim
+    K = head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        # --- time mix ---------------------------------------------------- #
+        "time_maa_x": jnp.zeros((d_model,), dtype),
+        "time_maa_5": jnp.zeros((5, d_model), dtype),      # w,k,v,r,g base mix
+        "tm_lora_a": (jax.random.normal(ks[0], (d_model, 5 * _TM_LORA))
+                      * s).astype(dtype),
+        "tm_lora_b": jnp.zeros((5, _TM_LORA, d_model), dtype),
+        "time_decay": jnp.tile(
+            jnp.linspace(-6.0, -1.0, K, dtype=jnp.float32), (H,)
+        ).astype(dtype),                                   # [d] log-log decay
+        "decay_lora_a": (jax.random.normal(ks[1], (d_model, _DECAY_LORA))
+                         * s).astype(dtype),
+        "decay_lora_b": jnp.zeros((_DECAY_LORA, d_model), dtype),
+        "time_faaaa": jnp.full((H, K), 0.5, dtype),        # bonus u
+        "wr": dense_init(ks[2], d_model, d_model, dtype),
+        "wk": dense_init(ks[3], d_model, d_model, dtype),
+        "wv": dense_init(ks[4], d_model, d_model, dtype),
+        "wg": dense_init(ks[5], d_model, d_model, dtype),
+        "wo": dense_init(ks[6], d_model, d_model, dtype),
+        "ln_x": norm_init(d_model, "layernorm", dtype),
+        # --- channel mix -------------------------------------------------- #
+        "cm_maa_k": jnp.zeros((d_model,), dtype),
+        "cm_maa_r": jnp.zeros((d_model,), dtype),
+        "cm_wk": dense_init(ks[7], d_model, d_ff, dtype),
+        "cm_wv": dense_init(ks[8], d_ff, d_model, dtype),
+        "cm_wr": dense_init(ks[9], d_model, d_model, dtype),
+    }
+    return p
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g).
+
+    x: [B, T, d]; sx = shifted(x) - x.  Returns [5, B, T, d]."""
+    xxx = x + sx * p["time_maa_x"]
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["tm_lora_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, _TM_LORA)
+    delta = jnp.einsum("btfr,frd->fbtd", lora, p["tm_lora_b"])
+    base = p["time_maa_5"][:, None, None, :]
+    return x[None] + sx[None] * (base + delta)
+
+
+def _token_shift(x, last):
+    """shift(x)[t] = x[t-1], with `last` ([B, d]) as x[-1]."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv6_time_mix(p, x, *, head_dim: int, last_x=None, state=None,
+                   chunk: int = 64, use_pallas=False, interpret=True):
+    """x: [B, T, d] -> (y, (new_last_x, new_state)).  state: [B,H,K,V]."""
+    B, T, d = x.shape
+    H, K = d // head_dim, head_dim
+    if last_x is None:
+        last_x = jnp.zeros((B, d), x.dtype)
+    sx = _token_shift(x, last_x) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+
+    # data-dependent decay (log-space, <= 0 after -exp).
+    dl = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["decay_lora_a"]))
+    w_log = -jnp.exp((p["time_decay"].astype(jnp.float32)
+                      + jnp.einsum("btr,rd->btd", dl,
+                                   p["decay_lora_b"]).astype(jnp.float32)))
+
+    heads = lambda z: z.reshape(B, T, H, K).transpose(0, 2, 1, 3)
+    r = heads(dense(p["wr"], xr))
+    k = heads(dense(p["wk"], xk))
+    v = heads(dense(p["wv"], xv))
+    g = jax.nn.silu(dense(p["wg"], xg))
+    w = heads(w_log)
+    r, k, v = (shard(z, "act_bhtd") for z in (r, k, v))
+
+    o, new_state = linear_scan(r, k, v, w, u=p["time_faaaa"], mode="rwkv6",
+                               chunk=chunk, initial_state=state,
+                               use_pallas=use_pallas, interpret=interpret)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d).astype(x.dtype)
+    o = apply_norm(p["ln_x"], o, "layernorm") * g
+    y = dense(p["wo"], o)
+    return y, (x[:, -1, :], new_state)
+
+
+def rwkv6_channel_mix(p, x, *, last_x=None):
+    B, T, d = x.shape
+    if last_x is None:
+        last_x = jnp.zeros((B, d), x.dtype)
+    sx = _token_shift(x, last_x) - x
+    xk = x + sx * p["cm_maa_k"]
+    xr = x + sx * p["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk)))
+    k = shard(k, "act_ffn")
+    kv = dense(p["cm_wv"], k)
+    return jax.nn.sigmoid(dense(p["cm_wr"], xr)) * kv, x[:, -1, :]
+
+
+# --------------------------------------------------------------------------- #
+# Decode (single token, exact recurrence)
+# --------------------------------------------------------------------------- #
+def rwkv6_state_init(batch: int, d_model: int, head_dim: int,
+                     dtype=jnp.float32):
+    H, K = d_model // head_dim, head_dim
+    return {
+        "tm_last": jnp.zeros((batch, d_model), dtype),
+        "cm_last": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, H, K, head_dim), jnp.float32),
+    }
+
+
+def rwkv6_time_mix_decode(p, x1, last_x, state, *, head_dim: int):
+    """x1: [B, d] single token.  Returns (y [B, d], new_last, new_state)."""
+    B, d = x1.shape
+    H, K = d // head_dim, head_dim
+    x = x1[:, None, :]
+    sx = (last_x - x1)[:, None, :]
+    xw, xk, xv, xr, xg = (z[:, 0] for z in _ddlerp(p, x, sx))
+
+    dl = jnp.tanh(xw @ p["decay_lora_a"])
+    w_log = -jnp.exp(p["time_decay"].astype(jnp.float32)
+                     + (dl @ p["decay_lora_b"]).astype(jnp.float32))
+    heads = lambda z: z.reshape(B, H, K)
+    r = heads(dense(p["wr"], xr)).astype(jnp.float32)
+    k = heads(dense(p["wk"], xk)).astype(jnp.float32)
+    v = heads(dense(p["wv"], xv)).astype(jnp.float32)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    w = jnp.exp(heads(w_log))
+    u = p["time_faaaa"].astype(jnp.float32)
+
+    kv = k[..., :, None] * v[..., None, :]                 # [B, H, K, V]
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., None] * state + kv
+    o = o.reshape(B, d).astype(x1.dtype)
+    o = apply_norm(p["ln_x"], o, "layernorm") * g
+    return dense(p["wo"], o), x1, new_state
+
+
+def rwkv6_channel_mix_decode(p, x1, last_x):
+    sx = last_x - x1
+    xk = x1 + sx * p["cm_maa_k"]
+    xr = x1 + sx * p["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk)))
+    kv = dense(p["cm_wv"], k)
+    return jax.nn.sigmoid(dense(p["cm_wr"], xr)) * kv, x1

@@ -1,0 +1,615 @@
+"""Decoder-only LM assembly for the assigned architectures.
+
+Layer-pattern machinery: `cfg.pattern` is a tuple of block kinds cycled over
+the depth ("attn", "swa", "local", "global", "rwkv6", "mamba2").  All kinds in
+one pattern must share param SHAPES (they do: local/global differ only in
+masking), so per-layer params are stacked [n_cycles, p, ...] and executed with
+one `lax.scan` over cycles whose body unrolls the p pattern positions — the
+HLO stays O(pattern) regardless of depth (compile-time critical for the
+512-device dry-run).
+
+Zamba2's weight-shared attention block (`cfg.shared_every > 0`) is applied at
+the top of every cycle from a SINGLE param copy (a scan-body closure
+constant); its KV caches are per-invocation.
+
+Paths:
+  * `forward`  — logits for teacher-forced training (no cache).
+  * `loss_fn`  — next-token cross-entropy (+ MoE aux loss).
+  * `prefill`  — forward + emitted per-layer caches.
+  * `decode_step` — one token against the cache (what decode_* cells lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rw
+from repro.models.layers import (apply_norm, embed_init, embed_lookup,
+                                 mlp, mlp_init, norm_init, unembed)
+from repro.models.moe import moe_apply, moe_init
+
+__all__ = ["LMConfig", "init_params", "param_specs", "forward", "loss_fn",
+           "prefill", "decode_step", "ATTN_KINDS"]
+
+ATTN_KINDS = ("attn", "swa", "local", "global")
+
+
+# --------------------------------------------------------------------------- #
+# Config
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # layer pattern
+    pattern: tuple = ("attn",)
+    shared_every: int = 0            # zamba2: shared attn block per cycle
+    # attention
+    rope: str = "neox"               # "neox" | "none"
+    rope_theta: float = 1e4
+    rope_theta_local: float = 1e4    # gemma3 local layers
+    rope_fraction: float = 1.0       # chatglm3: 0.5
+    rope_interleaved: bool = False
+    qk_norm: bool = False
+    qk_norm_kind: str = "rmsnorm"
+    window: int = 0                  # swa / local window
+    norm: str = "rmsnorm"
+    mlp_kind: str = "swiglu"
+    embed_scale: bool = False        # gemma: x *= sqrt(d)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0       # gemma-style tanh soft capping
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    dense_ff: int = 0                # arctic parallel dense-residual FFN
+    moe_group_size: int = 512
+    moe_capacity: float = 1.25
+    aux_loss_weight: float = 0.01
+    # SSM / RWKV
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+    # shared block (zamba2) geometry
+    shared_n_heads: int = 0
+    shared_d_ff: int = 0
+    # enc-dec (whisper; assembled in encdec.py)
+    enc_layers: int = 0
+    # execution
+    dtype: Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+    kv_block: int = 1024
+    scan_chunk: int = 64
+    use_pallas: bool = False
+    interpret: bool = True
+
+    def with_(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def cycles(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+# --------------------------------------------------------------------------- #
+# Per-block init
+# --------------------------------------------------------------------------- #
+def _block_init(key, cfg: LMConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    p: dict = {"norm1": norm_init(cfg.d_model, cfg.norm, dt)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.attention_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.qk_norm, cfg.qk_norm_kind, dt)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+        if cfg.n_experts:
+            p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                cfg.mlp_kind, dt)
+            if cfg.dense_ff:
+                p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.dense_ff,
+                                    cfg.mlp_kind, dt)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt)
+    elif kind == "rwkv6":
+        p["rwkv"] = rw.rwkv6_init(ks[0], cfg.d_model, cfg.rwkv_head_dim,
+                                  cfg.d_ff, dt)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+    elif kind == "mamba2":
+        p["mamba"] = m2.mamba2_init(
+            ks[0], cfg.d_model, state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            conv_width=cfg.conv_width, dtype=dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _shared_block_init(key, cfg: LMConfig):
+    """Zamba2 shared block: full-attention + MLP over concat(x, x0)."""
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    d_in = 2 * cfg.d_model
+    hd = d_in // cfg.shared_n_heads
+    from repro.models.layers import dense_init
+    return {
+        "norm1": norm_init(d_in, cfg.norm, dt),
+        "attn": attn.attention_init(ks[0], d_in, cfg.shared_n_heads,
+                                    cfg.shared_n_heads, hd, False,
+                                    cfg.norm, dt),
+        "norm2": norm_init(d_in, cfg.norm, dt),
+        "ffn": mlp_init(ks[1], d_in, cfg.shared_d_ff, "gelu", dt),
+        "out": {"down": dense_init(ks[2], d_in, cfg.d_model, dt)},
+    }
+
+
+def init_params(cfg: LMConfig, key):
+    ks = jax.random.split(key, 6)
+    p = len(cfg.pattern)
+    n_cyc, tail = cfg.cycles, cfg.tail
+
+    def stack_init(key, n, kinds):
+        keys = jax.random.split(key, n * len(kinds)).reshape(n, len(kinds), 2)
+
+        def one_cycle(cyc_keys):
+            return [_block_init(cyc_keys[i], cfg, kinds[i])
+                    for i in range(len(kinds))]
+
+        stacked = jax.vmap(one_cycle)(keys)
+        return stacked  # list over pattern positions, leaves [n, ...]
+
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": stack_init(ks[1], n_cyc, cfg.pattern),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.dtype),
+    }
+    if tail:
+        params["tail"] = [_block_init(k, cfg, cfg.pattern[i])
+                          for i, k in enumerate(jax.random.split(ks[2], tail))]
+    if cfg.shared_every:
+        params["shared"] = _shared_block_init(ks[3], cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[4], cfg.vocab, cfg.d_model,
+                                       cfg.dtype)
+    return params
+
+
+def param_specs(cfg: LMConfig):
+    """Allocation-free ShapeDtypeStruct tree (dry-run)."""
+    return jax.eval_shape(partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------- #
+# Block forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def _attn_kwargs(cfg: LMConfig, kind: str):
+    theta = cfg.rope_theta_local if kind == "local" else cfg.rope_theta
+    window = None
+    if kind == "swa" or kind == "local":
+        window = cfg.window
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope=cfg.rope, rope_theta=theta,
+                rope_fraction=cfg.rope_fraction,
+                rope_interleaved=cfg.rope_interleaved,
+                norm_kind=cfg.qk_norm_kind, window=window,
+                kv_block=cfg.kv_block)
+
+
+def _ffn_apply(cfg: LMConfig, p, h):
+    """Dense MLP / MoE / arctic MoE+dense-residual."""
+    if cfg.n_experts:
+        y, aux = moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k, group_size=cfg.moe_group_size,
+                           capacity_factor=cfg.moe_capacity,
+                           mlp_kind=cfg.mlp_kind)
+        if cfg.dense_ff:
+            y = y + mlp(p["ffn"], h, cfg.mlp_kind)
+        return y, aux
+    return mlp(p["ffn"], h, cfg.mlp_kind), 0.0
+
+
+def _block_forward(cfg: LMConfig, kind: str, p, x, positions):
+    """x: [B, T, d] -> (x, aux_loss)."""
+    aux = 0.0
+    if kind in ATTN_KINDS:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attn.attention_apply(p["attn"], h, positions=positions,
+                                     causal=True, **_attn_kwargs(cfg, kind))
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        y, aux = _ffn_apply(cfg, p, h)
+        x = x + y
+    elif kind == "rwkv6":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, _ = rw.rwkv6_time_mix(p["rwkv"], h, head_dim=cfg.rwkv_head_dim,
+                                 chunk=cfg.scan_chunk,
+                                 use_pallas=cfg.use_pallas,
+                                 interpret=cfg.interpret)
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        y, _ = rw.rwkv6_channel_mix(p["rwkv"], h)
+        x = x + y
+    elif kind == "mamba2":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, _ = m2.mamba2_apply(p["mamba"], h, state=cfg.ssm_state,
+                               head_dim=cfg.ssm_head_dim,
+                               expand=cfg.ssm_expand,
+                               conv_width=cfg.conv_width,
+                               chunk=cfg.scan_chunk,
+                               use_pallas=cfg.use_pallas,
+                               interpret=cfg.interpret)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return shard(x, "act_btd"), aux
+
+
+def _fill_attn_cache(entry, k, v, positions):
+    """Write prefill K/V [B, T, ...] into a cache entry sized S.
+
+    For ring caches (S < T) the last S tokens are kept and ROLLED so token at
+    position p lands on ring slot p % S (matching the decode-time update)."""
+    T = k.shape[1]
+    S = entry["k"].shape[1]
+    if T >= S:
+        k, v, positions = k[:, T - S:], v[:, T - S:], positions[:, T - S:]
+        if T % S:
+            roll = lambda x: jnp.roll(x, T % S, axis=1)
+            k, v, positions = roll(k), roll(v), roll(positions)
+        return {"k": k.astype(entry["k"].dtype),
+                "v": v.astype(entry["v"].dtype),
+                "pos": positions.astype(jnp.int32)}
+    z = jax.lax.dynamic_update_slice
+    return {"k": z(entry["k"], k.astype(entry["k"].dtype), (0, 0, 0, 0)),
+            "v": z(entry["v"], v.astype(entry["v"].dtype), (0, 0, 0, 0)),
+            "pos": z(entry["pos"], positions.astype(jnp.int32), (0, 0))}
+
+
+def _shared_forward(cfg: LMConfig, p, x, x0, positions, cache=None,
+                    position=None, prefill_entry=None):
+    """Zamba2 shared block over concat(x, x0); returns (delta, cache_entry)."""
+    h_in = jnp.concatenate([x, x0], axis=-1)
+    h = apply_norm(p["norm1"], h_in, cfg.norm)
+    d_in = h.shape[-1]
+    hd = d_in // cfg.shared_n_heads
+    kw = dict(n_heads=cfg.shared_n_heads, n_kv=cfg.shared_n_heads,
+              head_dim=hd, rope="neox", rope_theta=cfg.rope_theta,
+              norm_kind=cfg.norm)
+    new_cache = None
+    if cache is not None:                              # decode
+        a, new_cache = attn.attention_decode(p["attn"], h, cache,
+                                             position=position, **kw)
+    elif prefill_entry is not None:                    # prefill
+        a, (k, v) = attn.attention_apply(p["attn"], h, positions=positions,
+                                         causal=True, kv_block=cfg.kv_block,
+                                         return_kv=True, **kw)
+        new_cache = _fill_attn_cache(prefill_entry, k, v, positions)
+    else:                                              # train
+        a = attn.attention_apply(p["attn"], h, positions=positions,
+                                 causal=True, kv_block=cfg.kv_block, **kw)
+    h_in = h_in + a
+    h = apply_norm(p["norm2"], h_in, cfg.norm)
+    h_in = h_in + mlp(p["ffn"], h, "gelu")
+    from repro.models.layers import dense
+    return dense(p["out"]["down"], h_in), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Stacked-layer execution
+# --------------------------------------------------------------------------- #
+def _tree_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _run_layers(cfg: LMConfig, params, x, positions):
+    """Scan over cycles; body unrolls pattern positions.  Returns (x, aux)."""
+    pat = cfg.pattern
+    shared = params.get("shared")
+    x0 = x
+
+    def cycle(carry, cyc_params):
+        h, aux = carry
+        if shared is not None:
+            delta, _ = _shared_forward(cfg, shared, h, x0, positions)
+            h = h + delta
+        for i, kind in enumerate(pat):
+            h, a = _block_forward(cfg, kind, cyc_params[i], h, positions)
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(cycle, policy=None) if cfg.remat else cycle
+    if cfg.scan_layers and cfg.cycles > 1:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros(())), params["layers"])
+    else:
+        carry = (x, jnp.zeros(()))
+        for c in range(cfg.cycles):
+            carry, _ = body(carry, _tree_slice(params["layers"], c))
+        x, aux = carry
+    for i in range(cfg.tail):
+        if shared is not None and i == 0:
+            delta, _ = _shared_forward(cfg, shared, x, x0, positions)
+            x = x + delta
+        x, a = _block_forward(cfg, cfg.pattern[i], params["tail"][i], x,
+                              positions)
+        aux = aux + a
+    return x, aux
+
+
+def forward(cfg: LMConfig, params, tokens):
+    """tokens [B, T] -> logits [B, T, V] (f32)."""
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x, aux = _run_layers(cfg, params, x, positions)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params, batch):
+    """Next-token cross-entropy.  batch: {"tokens": [B, T] int32}."""
+    tokens = batch["tokens"]
+    logits, aux = forward(cfg, params, tokens)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + cfg.aux_loss_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# Prefill / decode
+# --------------------------------------------------------------------------- #
+from repro.models.kv_cache import cache_init  # noqa: E402  (cycle-free)
+
+
+def prefill(cfg: LMConfig, params, tokens, max_len: int):
+    """Run the prompt, emitting caches sized max_len.  Returns
+    (cache, last_logits [B, V])."""
+    # Forward pass reusing _run_layers is cheap to maintain but recomputes
+    # K/V; for the assigned shapes prefill is lowered as its own program, so
+    # we simply run block-by-block emitting caches.
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    cache = cache_init(cfg, B, max_len)
+    x0 = x
+
+    def fill_entry(kind, p, x, entry):
+        if kind in ATTN_KINDS:
+            h = apply_norm(p["norm1"], x, cfg.norm)
+            y, (k, v) = attn.attention_apply(
+                p["attn"], h, positions=positions, causal=True,
+                return_kv=True, **_attn_kwargs(cfg, kind))
+            x = x + y
+            entry = _fill_attn_cache(entry, k, v, positions)
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            y, _ = _ffn_apply(cfg, p, h)
+            x = x + y
+        elif kind == "rwkv6":
+            h = apply_norm(p["norm1"], x, cfg.norm)
+            y, (tm_last, wkv) = rw.rwkv6_time_mix(
+                p["rwkv"], h, head_dim=cfg.rwkv_head_dim,
+                chunk=cfg.scan_chunk, use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret)
+            x = x + y
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            y, cm_last = rw.rwkv6_channel_mix(p["rwkv"], h)
+            x = x + y
+            entry = {"tm_last": tm_last, "cm_last": cm_last, "wkv": wkv}
+        elif kind == "mamba2":
+            h = apply_norm(p["norm1"], x, cfg.norm)
+            y, (conv, ssm) = m2.mamba2_apply(
+                p["mamba"], h, state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+                conv_width=cfg.conv_width, chunk=cfg.scan_chunk,
+                use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+            x = x + y
+            entry = {"conv": conv, "ssm": ssm}
+        return shard(x, "act_btd"), entry
+
+    shared = params.get("shared")
+
+    def cycle(carry, inp):
+        h, = carry
+        cyc_params, cyc_cache = inp
+        blocks = cyc_cache["blocks"] if shared is not None else cyc_cache
+        new_entries = []
+        if shared is not None:
+            delta, sc = _shared_forward(cfg, shared, h, x0, positions,
+                                        prefill_entry=cyc_cache["shared"])
+            h = h + delta
+        for i, kind in enumerate(cfg.pattern):
+            h, e = fill_entry(kind, cyc_params[i], h, blocks[i])
+            new_entries.append(e)
+        out = (new_entries if shared is None
+               else {"shared": sc, "blocks": new_entries})
+        return (h,), out
+
+    if cfg.scan_layers and cfg.cycles > 1:
+        (x,), new_cache = jax.lax.scan(cycle, (x,),
+                                       (params["layers"], cache["layers"]))
+    else:
+        entries = []
+        h = x
+        for c in range(cfg.cycles):
+            (h,), e = cycle((h,), (_tree_slice(params["layers"], c),
+                                   _tree_slice(cache["layers"], c)))
+            entries.append(e)
+        x = h
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *entries) \
+            if entries else cache["layers"]
+    cache["layers"] = new_cache
+    if cfg.tail:
+        tg = cache["tail"]
+        blocks = tg["blocks"] if shared is not None else tg
+        new_entries = []
+        if shared is not None:
+            delta, sc = _shared_forward(cfg, shared, x, x0, positions,
+                                        prefill_entry=tg["shared"])
+            x = x + delta
+        for i in range(cfg.tail):
+            x, e = fill_entry(cfg.pattern[i], params["tail"][i], x, blocks[i])
+            new_entries.append(e)
+        cache["tail"] = (new_entries if shared is None
+                         else {"shared": sc, "blocks": new_entries})
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x[:, -1:, :])[:, 0]
+    return cache, logits
+
+
+def _block_decode(cfg: LMConfig, kind: str, p, x1, entry, position):
+    """x1: [B, 1, d].  Returns (x1, entry)."""
+    if kind in ATTN_KINDS:
+        h = apply_norm(p["norm1"], x1, cfg.norm)
+        kw = _attn_kwargs(cfg, kind)
+        window = kw.pop("window")
+        kw.pop("kv_block")
+        cache_kind = "ring" if window else "full"
+        y, entry = attn.attention_decode(p["attn"], h, entry,
+                                         position=position,
+                                         cache_kind=cache_kind, **kw)
+        x1 = x1 + y
+        h = apply_norm(p["norm2"], x1, cfg.norm)
+        y, _ = _ffn_apply(cfg, p, h)
+        x1 = x1 + y
+    elif kind == "rwkv6":
+        h = apply_norm(p["norm1"], x1, cfg.norm)[:, 0]
+        y, tm_last, wkv = rw.rwkv6_time_mix_decode(
+            p["rwkv"], h, entry["tm_last"], entry["wkv"],
+            head_dim=cfg.rwkv_head_dim)
+        x1 = x1 + y[:, None, :]
+        h = apply_norm(p["norm2"], x1, cfg.norm)[:, 0]
+        y, cm_last = rw.rwkv6_channel_mix_decode(p["rwkv"], h,
+                                                 entry["cm_last"])
+        x1 = x1 + y[:, None, :]
+        entry = {"tm_last": tm_last, "cm_last": cm_last, "wkv": wkv}
+    elif kind == "mamba2":
+        h = apply_norm(p["norm1"], x1, cfg.norm)[:, 0]
+        y, new = m2.mamba2_decode(p["mamba"], h, entry, state=cfg.ssm_state,
+                                  head_dim=cfg.ssm_head_dim,
+                                  expand=cfg.ssm_expand,
+                                  conv_width=cfg.conv_width)
+        x1 = x1 + y[:, None, :]
+        entry = new
+    return x1, entry
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens1):
+    """One decode step.  tokens1: [B] int32.  Returns (cache, logits [B,V])."""
+    B = tokens1.shape[0]
+    position = cache["pos"]                                    # [B]
+    x1 = embed_lookup(params["embed"], tokens1[:, None]).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x1 = x1 * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    shared = params.get("shared")
+    x0 = x1
+
+    def one_cycle(h, cyc_params, cyc_cache):
+        new_entries = []
+        if shared is not None:
+            delta, sc = _shared_forward(cfg, shared, h, x0, None,
+                                        cache=cyc_cache["shared"],
+                                        position=position)
+            h = h + delta
+        for i, kind in enumerate(cfg.pattern):
+            h, e = _block_decode(cfg, kind, cyc_params[i],
+                                 h, cyc_cache[i] if shared is None
+                                 else cyc_cache["blocks"][i], position)
+            new_entries.append(e)
+        out = new_entries if shared is None else {"shared": sc,
+                                                  "blocks": new_entries}
+        return h, out
+
+    if cfg.scan_layers and cfg.cycles > 1:
+        # The cache rides in the CARRY and is updated in place at cycle
+        # index i: passing it through xs/ys instead makes XLA hold two full
+        # cache copies (scan input + stacked output) — +1x total cache size
+        # in temps, which alone broke the decode_32k cells (§Dry-run iter 4).
+        def cycle(carry, inp):
+            h, layers_cache = carry
+            i, cyc_params = inp
+            cyc_cache = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False),
+                layers_cache)
+            h, out = one_cycle(h, cyc_params, cyc_cache)
+            layers_cache = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), i, 0),
+                layers_cache, out)
+            return (h, layers_cache), None
+
+        (x1, new_layers), _ = jax.lax.scan(
+            cycle, (x1, cache["layers"]),
+            (jnp.arange(cfg.cycles), params["layers"]))
+    else:
+        entries = []
+        h = x1
+        for c in range(cfg.cycles):
+            h, e = one_cycle(h, _tree_slice(params["layers"], c),
+                             _tree_slice(cache["layers"], c))
+            entries.append(e)
+        x1 = h
+        new_layers = (jax.tree.map(lambda *xs: jnp.stack(xs), *entries)
+                      if entries else cache["layers"])
+    cache["layers"] = new_layers
+    if cfg.tail:
+        tg = cache["tail"]
+        blocks = tg["blocks"] if shared is not None else tg
+        new_entries = []
+        if shared is not None:
+            delta, sc = _shared_forward(cfg, shared, x1, x0, None,
+                                        cache=tg["shared"],
+                                        position=position)
+            x1 = x1 + delta
+        for i in range(cfg.tail):
+            x1, e = _block_decode(cfg, cfg.pattern[i], params["tail"][i],
+                                  x1, blocks[i], position)
+            new_entries.append(e)
+        cache["tail"] = (new_entries if shared is None
+                         else {"shared": sc, "blocks": new_entries})
+    cache["pos"] = position + 1
+    x1 = apply_norm(params["final_norm"], x1, cfg.norm)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x1)[:, 0]
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return cache, logits

@@ -1,0 +1,84 @@
+"""Unified model API: every assigned architecture behind one interface.
+
+`build(cfg)` returns a ModelApi whose five callables are what the launchers
+(train / serve / dryrun) lower:
+    init(key)                      -> params
+    param_specs()                  -> ShapeDtypeStruct tree (no allocation)
+    loss(params, batch)            -> (loss, metrics)       [train_* shapes]
+    prefill(params, batch, max_len)-> (cache, logits)       [prefill_*]
+    decode(params, cache, tokens1) -> (cache, logits)       [decode_* / long_*]
+    cache_specs(B, max_len)        -> cache ShapeDtypeStructs
+    batch_specs(B, T)              -> input ShapeDtypeStructs (stub frontends
+                                      provide precomputed embeddings here)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec
+from repro.models import transformer as tfm
+from repro.models.kv_cache import cache_init, cache_specs
+from repro.models.transformer import LMConfig
+
+__all__ = ["ModelApi", "build"]
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: LMConfig
+    init: Callable
+    param_specs: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    cache_specs: Callable
+    cache_init: Callable
+    batch_specs: Callable
+    is_encdec: bool = False
+
+
+def _lm_batch_specs(cfg: LMConfig, B: int, T: int):
+    return {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+
+
+def _whisper_batch_specs(cfg: LMConfig, B: int, T: int):
+    return {"enc_x": jax.ShapeDtypeStruct((B, T, cfg.d_model), cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+
+
+def build(cfg: LMConfig, max_position: int = 4096) -> ModelApi:
+    if cfg.enc_layers:
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec.whisper_init(cfg, key, max_position),
+            param_specs=lambda: encdec.whisper_param_specs(cfg, max_position),
+            loss=partial(encdec.whisper_loss, cfg),
+            prefill=partial(encdec.whisper_prefill, cfg),
+            decode=partial(encdec.whisper_decode_step, cfg),
+            cache_specs=lambda B, S, T_enc=None: encdec.whisper_cache_specs(
+                cfg, B, S, T_enc if T_enc is not None else S),
+            cache_init=lambda B, S, T_enc=None: encdec.whisper_cache_init(
+                cfg, B, S, T_enc if T_enc is not None else S),
+            batch_specs=partial(_whisper_batch_specs, cfg),
+            is_encdec=True,
+        )
+
+    def lm_prefill(params, batch, max_len):
+        return tfm.prefill(cfg, params, batch["tokens"], max_len)
+
+    return ModelApi(
+        cfg=cfg,
+        init=partial(tfm.init_params, cfg),
+        param_specs=lambda: tfm.param_specs(cfg),
+        loss=partial(tfm.loss_fn, cfg),
+        prefill=lm_prefill,
+        decode=partial(tfm.decode_step, cfg),
+        cache_specs=lambda B, S, T_enc=None: cache_specs(cfg, B, S),
+        cache_init=lambda B, S, T_enc=None: cache_init(cfg, B, S),
+        batch_specs=partial(_lm_batch_specs, cfg),
+    )

@@ -1,0 +1,119 @@
+"""Batched serving engine: prefill + decode with continuous slot management.
+
+`ServeEngine` keeps a fixed decode batch of `slots`; requests are admitted
+into free slots (prefill), stepped together (one fused decode_step for the
+whole batch — the production serving pattern the decode_* dry-run cells
+lower), and retired on EOS/length.  Greedy or temperature sampling.
+
+Single-sequence decode state is carved out of / merged into the batched
+cache purely with tree ops, so the engine works unchanged for attention
+caches, ring caches, SSM states, and whisper self+cross caches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.zoo import ModelApi
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [T] int32
+    enc_x: np.ndarray | None = None     # whisper frame embeddings
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    temperature: float = 0.0
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, *, slots: int = 4, max_len: int = 256,
+                 seed: int = 0):
+        self.api = api
+        self.slots = slots
+        self.max_len = max_len
+        self.params = None
+        self.cache = None
+        self.active: dict[int, Request] = {}     # slot -> request
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(api.decode)
+
+    # ------------------------------------------------------------------ #
+    def load(self, params):
+        self.params = params
+        self.cache = self.api.cache_init(self.slots, self.max_len)
+
+    def _write_slot(self, slot: int, src_cache):
+        """Copy a batch-1 prefill cache into batched-cache slot `slot`."""
+        def merge(dst, src):
+            # batch axis location: find the axis where dst == slots and
+            # src == 1 (the batch axis survives stacking at the same index).
+            for ax in range(src.ndim):
+                if src.shape[ax] == 1 and dst.shape[ax] == self.slots:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+            return dst  # scalar/shared leaves
+        self.cache = jax.tree.map(merge, self.cache, src_cache)
+
+    def admit(self, req: Request) -> bool:
+        """Prefill `req` into a free slot; False if engine is full."""
+        free = [s for s in range(self.slots) if s not in self.active]
+        if not free or self.params is None:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        if req.enc_x is not None:
+            batch["enc_x"] = jnp.asarray(req.enc_x[None])
+        src_cache, logits = self.api.prefill(self.params, batch, self.max_len)
+        self._write_slot(slot, src_cache)
+        self.active[slot] = req
+        req.generated.append(int(self._sample(logits[0], req)))
+        return True
+
+    def _sample(self, logits, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(sub, logits / req.temperature))
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> list[Request]:
+        """One fused decode step for every active slot; returns finished."""
+        if not self.active:
+            return []
+        tokens = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot] = req.generated[-1]
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = self._sample(logits[slot], req)
+            req.generated.append(tok)
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.generated) >= req.max_new_tokens):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    # ------------------------------------------------------------------ #
+    def generate(self, reqs: list[Request]) -> list[Request]:
+        """Run a request list to completion with continuous admission."""
+        pending = list(reqs)
+        done: list[Request] = []
+        while pending or self.active:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+        return done

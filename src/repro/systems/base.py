@@ -1,0 +1,93 @@
+"""Benchmark nonlinear dynamical systems (the paper's four evaluation systems).
+
+Every system is a sparse polynomial ODE  dY/dt = Theta_true @ Phi(Y, U)  plus
+metadata needed by the data pipeline (sane initial-condition ranges, input
+excitation, integration step).  `true_theta(library)` places the ground-truth
+coefficients into an arbitrary-order library so recovered models can be scored
+both on trajectory reconstruction MSE (the paper's Table I metric) and on
+coefficient error.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import PolyLibrary, make_library
+
+
+@dataclass(frozen=True)
+class SystemSpec:
+    name: str
+    n: int              # state dimension
+    m: int              # input dimension
+    order: int          # polynomial order of the true dynamics
+    dt: float           # sampling interval (at or above Nyquist for the system)
+    horizon: int        # default number of samples per trace
+    y0_low: tuple
+    y0_high: tuple
+    input_kind: str     # "none" | "sum_of_sines" | "prbs"
+    input_scale: float = 1.0
+
+
+class DynamicalSystem(abc.ABC):
+    spec: SystemSpec
+
+    @abc.abstractmethod
+    def rows(self) -> list[dict[str, float]]:
+        """Ground-truth coefficients as per-state {term_name: coeff} dicts."""
+
+    # ------------------------------------------------------------------ #
+    def library(self, order: int | None = None) -> PolyLibrary:
+        return make_library(self.spec.n, self.spec.m,
+                            order if order is not None else self.spec.order)
+
+    def true_theta(self, library: PolyLibrary | None = None) -> np.ndarray:
+        lib = library or self.library()
+        return lib.theta_from_terms(self.rows())
+
+    def rhs(self, y, u=None):
+        """Polynomial rhs evaluated through the library (single source of truth)."""
+        lib = self.library()
+        theta = jnp.asarray(self.true_theta(lib), dtype=y.dtype)
+        phi = lib.eval(y, u if self.spec.m else None)
+        return phi @ theta.T
+
+    # ------------------------------------------------------------------ #
+    def sample_y0(self, key, batch: tuple[int, ...] = ()):
+        lo = jnp.asarray(self.spec.y0_low)
+        hi = jnp.asarray(self.spec.y0_high)
+        return jax.random.uniform(key, batch + (self.spec.n,), minval=lo, maxval=hi)
+
+    def sample_inputs(self, key, horizon: int, batch: tuple[int, ...] = ()):
+        """Excitation inputs [T, *batch, m]."""
+        m, dt, scale = self.spec.m, self.spec.dt, self.spec.input_scale
+        if m == 0:
+            return jnp.zeros((horizon,) + batch + (0,))
+        t = jnp.arange(horizon) * dt
+        if self.spec.input_kind == "sum_of_sines":
+            kf, ka, kp = jax.random.split(key, 3)
+            n_tones = 4
+            freqs = jax.random.uniform(kf, batch + (m, n_tones), minval=0.1, maxval=1.5)
+            phases = jax.random.uniform(kp, batch + (m, n_tones), maxval=2 * jnp.pi)
+            amps = jax.random.uniform(ka, batch + (m, n_tones), minval=0.2, maxval=1.0)
+            # [T, *batch, m]
+            wave = jnp.sin(2 * jnp.pi * freqs[None] * t.reshape((-1,) + (1,) * (len(batch) + 2))
+                           + phases[None])
+            u = (amps[None] * wave).sum(-1) * scale
+            return u
+        if self.spec.input_kind == "prbs":
+            # multi-level PRBS: two-level sequences make u^2 collinear with
+            # {1, u} in the polynomial library (unidentifiable); four levels
+            # keep every monomial of u linearly independent.
+            hold = 20
+            n_seg = horizon // hold + 1
+            levels = jax.random.choice(
+                key, jnp.asarray([0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]),
+                (n_seg,) + batch + (m,))
+            u = jnp.repeat(levels, hold, axis=0)[:horizon] * scale
+            return u
+        return jnp.zeros((horizon,) + batch + (m,))

@@ -1,0 +1,83 @@
+"""Generic fault-tolerant training loop.
+
+Wires together: jitted train step, data iterator, async checkpointing,
+heartbeat/straggler monitors, failure injection (tests), and resume.  Used
+by launch/train.py, the examples, and tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.distributed.fault_tolerance import (FailureInjector, Heartbeat,
+                                               StragglerDetector)
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["LoopConfig", "run_loop"]
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    straggler_threshold: float = 3.0
+    injector: FailureInjector | None = None
+    log_fn: Callable[[str], None] = print
+    metrics_hook: Callable[[int, dict], None] | None = None
+
+
+def run_loop(train_step: Callable, state: Any, data: Iterator,
+             cfg: LoopConfig) -> tuple[Any, list[dict]]:
+    """Runs to cfg.total_steps, resuming from the latest checkpoint if one
+    exists.  Returns (final state, metrics history)."""
+    mgr = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep,
+                             save_every=cfg.ckpt_every)
+           if cfg.ckpt_dir else None)
+    hb = Heartbeat()
+    straggler = StragglerDetector(threshold=cfg.straggler_threshold)
+    history: list[dict] = []
+
+    start = 0
+    if mgr is not None:
+        step0, restored = mgr.restore_latest(state)
+        if restored is not None:
+            state = restored
+            start = int(step0)
+            cfg.log_fn(f"[loop] resumed from checkpoint step {start}")
+
+    step = start
+    for step in range(start, cfg.total_steps):
+        if cfg.injector is not None:
+            cfg.injector.maybe_fail(step)
+        batch = next(data)
+        t0 = time.monotonic()
+        state, metrics = train_step(state, batch)
+        jax.block_until_ready(metrics)
+        dt = time.monotonic() - t0
+        hb.beat(step)
+        if straggler.observe(step, dt):
+            cfg.log_fn(f"[loop] straggler at step {step}: {dt:.2f}s "
+                       f"(ewma {straggler.ewma_s:.2f}s) — early checkpoint")
+            if mgr is not None:
+                mgr.maybe_save(step + 1, state, force=True)
+        m = {k: float(v) for k, v in metrics.items()
+             if getattr(v, "ndim", 0) == 0}
+        m["step"], m["dt_s"] = step, dt
+        history.append(m)
+        if cfg.metrics_hook:
+            cfg.metrics_hook(step, m)
+        if step % cfg.log_every == 0:
+            loss = m.get("loss", m.get("nll", float("nan")))
+            cfg.log_fn(f"[loop] step {step}: loss {loss:.4f} ({dt:.2f}s)")
+        if mgr is not None:
+            mgr.maybe_save(step + 1, state)
+    if mgr is not None:
+        mgr.maybe_save(cfg.total_steps, state, force=True)
+        mgr.wait()
+    return state, history

@@ -1,0 +1,194 @@
+"""Minimal optax-style optimizers in pure JAX pytrees.
+
+Kept dependency-free so optimizer states inherit parameter shardings directly
+under pjit (state is a pytree of arrays shaped like params — the sharding
+rules in distributed/sharding.py map over it unchanged, giving ZeRO-style
+sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgd", "adafactor", "apply_updates", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "Optimizer"]
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    mom: PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], Any]
+    update: Callable[..., tuple[PyTree, Any]]
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamState, params=None):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype if p is not None else u.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.9,
+        clip_norm: float | None = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return SgdState(step=jnp.zeros((), jnp.int32),
+                        mom=jax.tree.map(lambda p: jnp.zeros_like(p), params))
+
+    def update(grads, state: SgdState, params=None):
+        del params
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state.mom, grads)
+        updates = jax.tree.map(lambda m: -lr_fn(step) * m, mom)
+        return updates, SgdState(step=step, mom=mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (Shazeer & Stern 2018): factored second moments, no momentum.
+# O(d_in + d_out) state per matrix instead of O(d_in * d_out) — the optimizer
+# that lets a 476B-param MoE train inside 16 GB/chip at 256 chips (see
+# configs/arctic_480b.py).  Factoring is over the LAST TWO axes; leading axes
+# (stacked layers, experts) are treated as batch.
+# --------------------------------------------------------------------------- #
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: PyTree      # row second-moment (rank>=2 leaves) or full v (rank<2)
+    vc: PyTree      # col second-moment (rank>=2) or None-placeholder
+
+
+def adafactor(lr: float | Callable = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor
+                and p.shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def vr0(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc0(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr0, params),
+                              vc=jax.tree.map(vc0, params))
+
+    def update(grads, state: AdafactorState, params=None):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        # time-dependent decay (t^-0.8 schedule from the paper)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if factored(p):
+                vr_n = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc_n = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = vr_n.mean(axis=-1, keepdims=True)
+                vhat = (vr_n / jnp.maximum(denom, eps))[..., None] \
+                    * vc_n[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(vr_n, eps))
+            # RMS clipping (paper eq. 6)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), vr_n, vc_n
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        vr = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdafactorState(step=step, vr=vr, vc=vc)
+
+    return Optimizer(init=init, update=update)

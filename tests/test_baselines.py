@@ -1,0 +1,91 @@
+"""EMILY and PINN+SR baseline API/behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.emily import Emily, EmilyConfig
+from repro.core.pinn_sr import PinnSR, PinnSRConfig
+from repro.core.trainer import fit
+from repro.data.pipeline import WindowDataset
+from repro.systems.lotka_volterra import LotkaVolterra
+from repro.systems.simulate import simulate_batch
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lv_data():
+    sys_ = LotkaVolterra()
+    tr = simulate_batch(sys_, jax.random.PRNGKey(0), batch=4, horizon=250)
+    ds = WindowDataset.from_trace(tr.ys_noisy, tr.us, tr.dt, window=40,
+                                  stride=12)
+    return sys_, tr, ds
+
+
+def test_emily_node_forward_is_integration(lv_data):
+    """With a zero-init output layer the NODE forward returns constants."""
+    sys_, tr, ds = lv_data
+    em = Emily(EmilyConfig(n=2, m=0, dt=sys_.spec.dt))
+    p = em.init(jax.random.PRNGKey(1))
+    y = ds.y_win[:4]
+    ys = em.node_forward(p, y[:, 0, :], ds.u_win[:4])
+    np.testing.assert_allclose(
+        np.asarray(ys), np.broadcast_to(np.asarray(y[:, :1]), y.shape))
+
+
+def test_emily_loss_decreases(lv_data):
+    sys_, tr, ds = lv_data
+    em = Emily(EmilyConfig(n=2, m=0, hidden=32, dt=sys_.spec.dt))
+    p = em.init(jax.random.PRNGKey(2))
+    res = fit(em, p, ds.batches(jax.random.PRNGKey(3), 32, epochs=100),
+              steps=120, lr=3e-3)
+    assert res.history[-1] < res.history[0]
+
+
+def test_emily_recover_shape(lv_data):
+    sys_, tr, ds = lv_data
+    em = Emily(EmilyConfig(n=2, m=0, dt=sys_.spec.dt))
+    p = em.init(jax.random.PRNGKey(4))
+    theta = em.recover(p, ds.y_win, ds.u_win)
+    assert theta.shape == (2, em.lib.size)
+
+
+def test_pinnsr_net_and_derivative(lv_data):
+    sys_, tr, ds = lv_data
+    pm = PinnSR(PinnSRConfig(n=2, m=0, dt=sys_.spec.dt, horizon=250))
+    p = pm.init(jax.random.PRNGKey(5), tr.ys[0])
+    y, ydot = pm.net_and_dot(p, jnp.asarray(0.3))
+    assert y.shape == (2,) and ydot.shape == (2,)
+    # finite-difference check of the jvp derivative
+    eps = 1e-4
+    fd = (pm.net(p, jnp.asarray(0.3 + eps)) - pm.net(p, jnp.asarray(0.3 - eps))) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(ydot), np.asarray(fd), atol=1e-2,
+                               rtol=1e-2)
+
+
+def test_pinnsr_threshold_freezes(lv_data):
+    sys_, tr, ds = lv_data
+    pm = PinnSR(PinnSRConfig(n=2, m=0, dt=sys_.spec.dt, horizon=250,
+                             threshold=0.5))
+    p = pm.init(jax.random.PRNGKey(6), tr.ys[0])
+    p = {**p, "theta": p["theta"].at[0, 1].set(1.0).at[1, 2].set(0.1)}
+    p2 = pm.apply_threshold(p)
+    assert float(p2["theta"][0, 1]) == 1.0
+    assert float(p2["theta"][1, 2]) == 0.0
+    assert float(p2["mask"][1, 2]) == 0.0
+
+
+def test_pinnsr_loss_decreases(lv_data):
+    sys_, tr, ds = lv_data
+    pm = PinnSR(PinnSRConfig(n=2, m=0, hidden=32, depth=2, dt=sys_.spec.dt,
+                             horizon=250))
+    p = pm.init(jax.random.PRNGKey(7), tr.ys[0])
+    batch = (tr.ys_noisy[0], tr.us[0])
+
+    def batches():
+        while True:
+            yield batch
+
+    res = fit(pm, p, batches(), steps=100, lr=2e-3)
+    assert res.history[-1] < res.history[0]

@@ -1,0 +1,66 @@
+"""Data pipeline tests: windowing semantics, stats, prefetch/straggler."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import PrefetchIterator, WindowDataset, make_windows
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_window_content_alignment():
+    """Window t's inputs must be the ones held during its transitions."""
+    T, n, m = 20, 2, 1
+    ys = jnp.arange((T + 1) * n, dtype=jnp.float32).reshape(T + 1, n)
+    us = jnp.arange(T * m, dtype=jnp.float32).reshape(T, m)
+    y_win, u_win = make_windows(ys, us, window=5, stride=3)
+    # first window starts at 0: ys[0..5], us[0..4]
+    np.testing.assert_array_equal(np.asarray(y_win[0]), np.asarray(ys[:6]))
+    np.testing.assert_array_equal(np.asarray(u_win[0]), np.asarray(us[:5]))
+    # second window starts at 3
+    np.testing.assert_array_equal(np.asarray(y_win[1]), np.asarray(ys[3:9]))
+    np.testing.assert_array_equal(np.asarray(u_win[1]), np.asarray(us[3:8]))
+
+
+def test_batched_traces_windowing():
+    ys = jnp.zeros((3, 21, 2))
+    us = jnp.zeros((3, 20, 1))
+    y_win, u_win = make_windows(ys, us, window=10, stride=5)
+    assert y_win.shape[0] == 3 * u_win.shape[0] // 3
+    assert y_win.shape[1:] == (11, 2)
+    assert u_win.shape[1:] == (10, 1)
+
+
+def test_batches_iterator_shapes_and_count():
+    ds = WindowDataset(y_win=jnp.zeros((50, 11, 2)),
+                       u_win=jnp.zeros((50, 10, 1)), dt=0.01)
+    batches = list(ds.batches(jax.random.PRNGKey(0), 16, epochs=2))
+    assert len(batches) == 6      # 3 per epoch, drop remainder
+    assert batches[0][0].shape == (16, 11, 2)
+
+
+def test_norm_stats():
+    y = jnp.stack([jnp.full((11, 2), 3.0), jnp.full((11, 2), 5.0)])
+    u = jnp.zeros((2, 10, 1))
+    ds = WindowDataset(y_win=y, u_win=u, dt=0.01)
+    mu, sigma = ds.norm_stats()
+    np.testing.assert_allclose(np.asarray(mu), [4.0, 4.0, 0.0], atol=1e-6)
+
+
+def test_prefetch_iterator_order_and_completion():
+    it = PrefetchIterator(iter(range(10)), depth=2)
+    assert list(it) == list(range(10))
+
+
+def test_prefetch_straggler_counted():
+    def slow_gen():
+        yield 1
+        time.sleep(0.3)
+        yield 2
+
+    it = PrefetchIterator(slow_gen(), depth=1, deadline_s=0.05)
+    out = list(it)
+    assert out == [1, 2]
+    assert it.straggler_events >= 1

@@ -1,0 +1,87 @@
+"""Fault tolerance: failure-injected restart is bit-exact; stragglers are
+detected; elastic re-mesh plans are sane."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.tokens import TokenStream
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               SimulatedPreemption,
+                                               StragglerDetector,
+                                               elastic_plan)
+from repro.models.zoo import build
+from repro.train.loop import LoopConfig, run_loop
+from repro.train.optimizer import adamw
+from repro.train.train_state import init_state, make_train_step
+
+
+def _setup(tmp_path):
+    api = build(get_arch("qwen3-8b").smoke)
+    opt = adamw(lr=1e-3)
+    params = api.init(jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(api.loss, opt))
+    state = init_state(params, opt)
+    stream = TokenStream(vocab=api.cfg.vocab, batch=2, seq_len=16)
+    return api, step_fn, state, stream
+
+
+@pytest.mark.slow
+def test_failure_injection_bit_exact_resume(tmp_path):
+    api, step_fn, state0, stream = _setup(tmp_path)
+
+    # uninterrupted run: 8 steps
+    cfg = LoopConfig(total_steps=8, ckpt_dir=None, log_every=100)
+    ref_state, _ = run_loop(step_fn, state0, iter(stream), cfg)
+
+    # interrupted run: checkpoint every 2 steps, die at step 5, restart.
+    ckpt_dir = str(tmp_path / "ckpt")
+    inj = FailureInjector(fail_at_step=5)
+    cfg2 = LoopConfig(total_steps=8, ckpt_dir=ckpt_dir, ckpt_every=2,
+                      injector=inj, log_every=100)
+    with pytest.raises(SimulatedPreemption):
+        run_loop(step_fn, state0, iter(stream), cfg2)
+
+    # restart: run_loop resumes from step 4's checkpoint and replays the
+    # deterministic data stream from there.
+    def data_from(step):
+        return stream.iter_from(step)
+
+    cfg3 = LoopConfig(total_steps=8, ckpt_dir=ckpt_dir, ckpt_every=2,
+                      log_every=100)
+    # resume-aware data: run_loop reads latest checkpoint first, so feed a
+    # stream seeked to it.
+    from repro.train.checkpoint import latest_step
+    start = latest_step(ckpt_dir)
+    assert start is not None and 0 < start < 8
+    resumed, _ = run_loop(step_fn, state0, data_from(start), cfg3)
+
+    for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_straggler_detector():
+    det = StragglerDetector(threshold=3.0)
+    assert not det.observe(0, 1.0)
+    for s in range(1, 5):
+        assert not det.observe(s, 1.0)
+    assert det.observe(5, 10.0)           # 10x the EWMA -> straggler
+    assert det.events and det.events[0]["step"] == 5
+    assert abs(det.ewma_s - 1.0) < 0.1    # outlier excluded from EWMA
+
+
+def test_elastic_plan():
+    p = elastic_plan(512)
+    assert p["mesh_shape"] == (32, 16) and p["dropped_devices"] == 0
+    p = elastic_plan(240)                 # lost a host: 240 devices survive
+    assert p["mesh_shape"] == (15, 16)
+    assert p["dropped_devices"] == 0
+    p = elastic_plan(250)                 # ragged: drop the remainder
+    assert p["mesh_shape"] == (15, 16) and p["dropped_devices"] == 10
+    p = elastic_plan(8)                   # degenerate single-host debug
+    assert p["mesh_shape"][0] * p["mesh_shape"][1] <= 8

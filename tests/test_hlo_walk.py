@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO walker unit tests on hand-written HLO snippets."""
+from __future__ import annotations
+
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.hlo_walk import walk_hlo
+
+HLO = """
+HloModule test
+
+%adder (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%adder
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> (s32[], f32[8,16]) {
+  %x = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %x)
+  ROOT %w0 = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+}
+"""
+
+
+def test_while_trip_multiplication():
+    cost = walk_hlo(HLO)
+    # dot: 2*8*16*16 = 4096 flops, x12 trips
+    assert cost.flops >= 12 * 4096
+    assert cost.flops < 12 * 4096 * 1.2     # small elementwise slack
+    # all-reduce: 8*16*4 bytes, group 4 -> wire 2*(3/4)*512 = 768, x12
+    assert abs(cost.wire_bytes - 12 * 768.0) < 1e-6
+    assert cost.while_breakdown[0]["trip"] == 12
+
+
+def test_collective_parse_direct():
+    stats = parse_collectives(HLO)
+    assert stats.per_op["all-reduce"]["count"] == 1
+    assert stats.per_op["all-reduce"]["max_group"] == 4
+
+
+def test_bytes_exclude_tuple_plumbing():
+    cost = walk_hlo(HLO)
+    # traffic: dot (operands+out) + all-reduce (operand+out) per trip, plus
+    # entry tuple ops are free.  Rough bound: < 10 KB * 12 trips.
+    assert cost.bytes < 12 * 10_000
+    assert cost.bytes > 12 * (8 * 16 * 4 * 2)     # at least dot in/out

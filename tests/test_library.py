@@ -1,0 +1,80 @@
+"""Unit + property tests for the polynomial library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.library import make_library, n_library_terms
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("n,m,order", [(2, 0, 2), (3, 0, 2), (3, 1, 3), (2, 1, 2)])
+def test_term_count(n, m, order):
+    lib = make_library(n, m, order)
+    assert lib.size == n_library_terms(n + m, order)
+    assert len(lib.names) == lib.size
+    assert len(set(lib.names)) == lib.size          # no duplicate monomials
+
+
+def test_eval_matches_manual():
+    lib = make_library(2, 1, 2)
+    y = jnp.asarray([[2.0, 3.0]])
+    u = jnp.asarray([[0.5]])
+    phi = np.asarray(lib.eval(y, u))[0]
+    by_name = dict(zip(lib.names, phi))
+    assert by_name["1"] == pytest.approx(1.0)
+    assert by_name["y0"] == pytest.approx(2.0)
+    assert by_name["y1"] == pytest.approx(3.0)
+    assert by_name["u0"] == pytest.approx(0.5)
+    assert by_name["y0*y1"] == pytest.approx(6.0)
+    assert by_name["u0*y0"] == pytest.approx(1.0)
+    assert by_name["y1*y1"] == pytest.approx(9.0)
+
+
+def test_theta_roundtrip():
+    lib = make_library(2, 0, 2)
+    rows = [{"y0": 1.0, "y0*y1": -0.1}, {"y1": -1.5, "y0*y1": 0.075}]
+    theta = lib.theta_from_terms(rows)
+    d = lib.coeff_dict(theta)
+    assert d["dy0/dt"] == {"y0": 1.0, "y0*y1": -0.1}
+    assert d["dy1/dt"] == {"y1": -1.5, "y0*y1": 0.075}
+
+
+def test_theta_from_terms_canonicalizes_order():
+    lib = make_library(2, 1, 2)
+    a = lib.theta_from_terms([{"y1*y0": 2.0}, {"y0*u0": 3.0}])
+    b = lib.theta_from_terms([{"y0*y1": 2.0}, {"u0*y0": 3.0}])
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3), m=st.integers(0, 2), order=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eval_degree_bound_property(n, m, order, seed):
+    """Scaling every variable by s scales each term by at most s^order —
+    and term j by exactly s^deg(j)."""
+    lib = make_library(n, m, order)
+    key = jax.random.PRNGKey(seed)
+    ky, ku = jax.random.split(key)
+    y = jax.random.uniform(ky, (4, n), minval=0.5, maxval=2.0)
+    u = jax.random.uniform(ku, (4, m), minval=0.5, maxval=2.0) if m else None
+    s = 3.0
+    phi1 = lib.eval(y, u)
+    phi2 = lib.eval(s * y, s * u if m else None)
+    degrees = (np.asarray(lib.term_indices) > 0).sum(-1)
+    expected = phi1 * (s ** degrees)[None, :]
+    np.testing.assert_allclose(np.asarray(phi2), np.asarray(expected),
+                               rtol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 3), order=st.integers(1, 3))
+def test_library_batch_shape_property(n, order):
+    lib = make_library(n, 0, order)
+    y = jnp.ones((2, 5, n))
+    assert lib.eval(y, None).shape == (2, 5, lib.size)

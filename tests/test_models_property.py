@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) on model-stack invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    local_attention)
+from repro.models.layers import apply_rope
+
+
+def _naive_attention(q, k, v, causal=True, window=None):
+    B, T, H, dh = q.shape
+    n_kv = k.shape[2]
+    G = H // n_kv
+    qg = q.reshape(B, T, n_kv, G, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("btkgd,bjkd->btkgj", qg, k.astype(jnp.float32))
+    i = jnp.arange(T)
+    mask = jnp.ones((T, T), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > i[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgj,bjkd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, dh)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]),
+       st.sampled_from([8, 17, 32]))
+def test_flash_matches_naive(seed, g, t):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    B, n_kv, dh = 2, 2, 8
+    q = jax.random.normal(ks[0], (B, t, n_kv * g, dh))
+    k = jax.random.normal(ks[1], (B, t, n_kv, dh))
+    v = jax.random.normal(ks[2], (B, t, n_kv, dh))
+    out = flash_attention(q, k, v, causal=True, kv_block=8, q_block=8)
+    ref = _naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 8]))
+def test_local_matches_naive_windowed(seed, w):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    B, T, n_kv, g, dh = 1, 24, 2, 2, 8
+    q = jax.random.normal(ks[0], (B, T, n_kv * g, dh))
+    k = jax.random.normal(ks[1], (B, T, n_kv, dh))
+    v = jax.random.normal(ks[2], (B, T, n_kv, dh))
+    out = local_attention(q, k, v, window=w)
+    ref = _naive_attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_causality_future_independence():
+    """Changing future tokens must not change past attention outputs."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    B, T, H, dh = 1, 16, 4, 8
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    out1 = flash_attention(q, k, v, causal=True, kv_block=8, q_block=8)
+    k2 = k.at[:, T // 2:].add(jax.random.normal(ks[3], (B, T // 2, H, dh)))
+    v2 = v.at[:, T // 2:].add(1.0)
+    out2 = flash_attention(q, k2, v2, causal=True, kv_block=8, q_block=8)
+    np.testing.assert_allclose(np.asarray(out1[:, :T // 2]),
+                               np.asarray(out2[:, :T // 2]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1.0, 0.5]),
+       st.booleans())
+def test_rope_relative_shift_invariance(seed, fraction, interleaved):
+    """RoPE: q.k inner products depend only on relative positions."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    B, T, H, dh = 1, 8, 1, 16
+    q = jax.random.normal(k1, (B, T, H, dh))
+    k = jax.random.normal(k2, (B, T, H, dh))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def scores(shift):
+        qr = apply_rope(q, pos + shift, fraction=fraction,
+                        interleaved=interleaved)
+        kr = apply_rope(k, pos + shift, fraction=fraction,
+                        interleaved=interleaved)
+        return jnp.einsum("bthd,bshd->bhts", qr, kr)
+
+    np.testing.assert_allclose(np.asarray(scores(0)), np.asarray(scores(13)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_full():
+    """decode of position t == row t of full causal attention."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, S, n_kv, g, dh = 2, 12, 2, 2, 8
+    H = n_kv * g
+    q_all = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, n_kv, dh))
+    v = jax.random.normal(ks[2], (B, S, n_kv, dh))
+    ref = _naive_attention(q_all, k, v, causal=True)
+    t = S - 1
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = decode_attention(q_all[:, t:t + 1], k, v, kv_pos,
+                           jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, t]),
+                               rtol=2e-3, atol=2e-3)

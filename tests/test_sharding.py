@@ -1,0 +1,114 @@
+"""Sharding rules unit tests (no multi-device mesh needed: a 1x1 mesh
+exercises rule selection; spec CONTENT is asserted on a fake mesh object)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+class FakeMesh:
+    """Duck-typed mesh: just axis names/sizes (enough for spec logic)."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        return int(np.prod(list(self.shape.values())))
+
+
+def _spec(leaf_shape, rule_spec, mesh, **kw):
+    # reuse internals: strip + divisibility + repair
+    ns = sh.logical_to_sharding.__wrapped__ if hasattr(
+        sh.logical_to_sharding, "__wrapped__") else sh.logical_to_sharding
+    try:
+        return ns(rule_spec, mesh, leaf_shape, **kw).spec
+    except Exception:
+        pytest.skip("NamedSharding requires a real mesh")
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_strip_missing_axes():
+    m = FakeMesh({"data": 4, "model": 2})
+    spec = sh._strip_missing_axes(P(("pod", "data"), "model"), m)
+    assert spec == P(("data",), "model")
+
+
+def test_shardable():
+    m = FakeMesh({"data": 4, "model": 2})
+    assert sh._shardable(8, "data", m)
+    assert not sh._shardable(6, "data", m)
+    assert sh._shardable(6, "model", m)
+    assert sh._shardable(5, None, m)
+    assert not sh._shardable(4, ("data", "model"), m)   # 4 % 8
+
+
+def test_param_rules_order():
+    """Expert rules must match before generic gate/up rules."""
+    import re
+    rules = sh.DEFAULT_PARAM_RULES
+    path = "layers/0/moe/experts/up/w"
+    for pat, spec in rules:
+        if re.compile(pat).match(path):
+            assert spec == P("model", "data", None)
+            break
+    path2 = "layers/0/ffn/up/w"
+    for pat, spec in rules:
+        if re.compile(pat).match(path2):
+            assert spec == P("data", "model")
+            break
+
+
+def test_param_shardings_on_real_mesh():
+    """End-to-end on a 1-device mesh: every param leaf gets a sharding and
+    stacked leading axes are padded with None."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = sh.ShardingRules(mesh=mesh)
+    params = {
+        "layers": {"attn": {"wq": {"w": jnp.zeros((4, 8, 16))}}},  # stacked
+        "embed": {"w": jnp.zeros((32, 8))},
+        "norm": {"scale": jnp.zeros((8,))},
+    }
+    out = sh.param_shardings(rules, params)
+    assert out["layers"]["attn"]["wq"]["w"].spec == P(None, "data", "model")
+    assert out["embed"]["w"].spec == P("model", "data")
+    assert out["norm"]["scale"].spec in (P(), P(None))  # both = replicated
+
+
+def test_repair_relocates_model_axis():
+    """mixtral case: 8 experts cannot split over model=16 -> the model axis
+    must land on a divisible dim instead of silently replicating."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # simulate divisibility logic with the production mesh sizes via a
+    # private check: use logical_to_sharding on the real (1,1) mesh but
+    # verify the repair branch through _shardable on the fake mesh.
+    assert not sh._shardable(8, "model", MESH)
+    assert sh._shardable(16384, "model", MESH)
+    # full-path check on the real production mesh requires 512 devices and
+    # is exercised by launch/dryrun.py (mixtral cells fit post-repair).
+
+
+def test_cache_shardings_rank_dispatch():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = sh.ShardingRules(mesh=mesh)
+    cache = {
+        "layers": [{"k": jnp.zeros((3, 2, 8, 2, 4)),     # stacked attn
+                    "v": jnp.zeros((3, 2, 8, 2, 4)),
+                    "pos": jnp.zeros((3, 2, 8), jnp.int32)}],
+        "pos": jnp.zeros((2,), jnp.int32),
+    }
+    out = sh.cache_shardings(rules, cache, batch=2)
+    assert out["layers"][0]["k"].spec == P(None, ("data",), "model", None, None)
+    assert out["pos"].spec == P(("data",))
+
+
+def test_shard_noop_outside_rules():
+    x = jnp.ones((4, 4))
+    assert sh.shard(x, "act_btd") is x
