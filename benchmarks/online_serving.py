@@ -1,0 +1,78 @@
+"""Online serving benchmark: sustained refresh latency + twin throughput.
+
+Streams simulated F-8 telemetry through `TwinServer` and measures the
+steady-state serving tick against the paper's mission budget (refresh every
+deployed twin in <= 1 s — 5x under the 5 s human-pilot reaction time).
+
+Reported per fleet size:
+  p50/p99/max per-tick refresh latency (ms), deadline violations, and
+  twin-refreshes-per-second (refit slots advanced per wall second) — the
+  number every scaling PR (sharded fleets, async ingestion, multi-backend)
+  must move.  Emitted to bench_out/online.csv by benchmarks/run.py
+  (`--only online`).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.merinda import MerindaConfig
+from repro.systems.f8_crusader import F8Crusader
+from repro.systems.simulate import simulate_batch
+from repro.twin.monitor import GuardConfig
+from repro.twin.server import TwinServer, TwinServerConfig
+
+CHUNK = 8          # telemetry samples per twin per tick
+WARMUP = 18        # ticks excluded from stats: jit compile, slot fill, and
+                   # the first deploy/guard activations all land in warmup
+
+
+def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
+    system = F8Crusader()
+    horizon = CHUNK * (WARMUP + ticks) + 1
+    trace = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
+                           horizon=horizon, noise_std=0.002)
+    ys, us = np.asarray(trace.ys_noisy), np.asarray(trace.us)
+
+    cfg = TwinServerConfig(
+        merinda=MerindaConfig(n=system.spec.n, m=system.spec.m, order=3,
+                              dt=system.spec.dt, hidden=32, head_hidden=32,
+                              n_active=24),
+        max_twins=n_twins, refit_slots=refit_slots,
+        capacity=256, window=24, stride=8, windows_per_twin=8,
+        steps_per_tick=2, deploy_after=8, min_residency=4, max_residency=16,
+        guard=GuardConfig(window=32), seed=seed)
+    srv = TwinServer(cfg)
+
+    for t in range(WARMUP + ticks):
+        lo = t * CHUNK
+        for i in range(n_twins):
+            srv.ingest(i, ys[i, lo:lo + CHUNK], us[i, lo:lo + CHUNK])
+        srv.tick()
+        if t == WARMUP - 1:
+            srv.reset_latency_stats()
+    s = srv.latency_summary()
+    deployed = sum(r.deployed for r in srv.twins.values())
+    return {
+        "twins": n_twins, "refit_slots": refit_slots, "ticks": s["ticks"],
+        "p50_ms": round(s["p50_ms"], 2), "p99_ms": round(s["p99_ms"], 2),
+        "max_ms": round(s["max_ms"], 2),
+        "deadline_s": s["deadline_s"], "violations": s["violations"],
+        "twin_refreshes_per_s": round(s["twin_refreshes_per_s"], 1),
+        "deployed": deployed,
+    }
+
+
+def run(quick: bool = True) -> None:
+    sweeps = ([(64, 8, 30)] if quick
+              else [(64, 8, 60), (128, 8, 60), (256, 16, 60)])
+    rows = [_serve(n, s, t) for n, s, t in sweeps]
+    print_rows("online serving: sustained refresh latency (1 s deadline)",
+               rows)
+    path = write_csv("online.csv", rows)
+    print(f"[online] wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -17,7 +17,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-size sweeps (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
-                    choices=["table1", "table2", "table3", "roofline"])
+                    choices=["table1", "table2", "table3", "roofline",
+                             "online"])
     args = ap.parse_args()
     quick = not args.full
 
@@ -30,6 +31,9 @@ def main() -> None:
     if args.only in (None, "table1"):
         from benchmarks import table1_accuracy
         table1_accuracy.run(quick=quick)
+    if args.only in (None, "online"):
+        from benchmarks import online_serving
+        online_serving.run(quick=quick)
     if args.only in (None, "roofline"):
         d = Path("artifacts/dryrun")
         if d.exists() and any(d.glob("*.json")):

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["WindowDataset", "make_windows", "PrefetchIterator"]
+__all__ = ["WindowDataset", "make_windows", "PrefetchIterator",
+           "ring_latest", "make_ring_windows"]
 
 
 def make_windows(ys: jnp.ndarray, us: jnp.ndarray, window: int,
@@ -45,6 +46,47 @@ def make_windows(ys: jnp.ndarray, us: jnp.ndarray, window: int,
     y_win = y_win.reshape(B * N, window + 1, n)
     u_win = u_win.reshape(B * N, window, m)
     return y_win, u_win
+
+
+def ring_latest(ring_y: jnp.ndarray, ring_u: jnp.ndarray, count: jnp.ndarray,
+                slots: jnp.ndarray, length: int):
+    """Gather the newest `length+1` samples per ring slot, in time order.
+
+    The online path (twin/stream.py) stores telemetry in fixed-capacity ring
+    buffers; this unrolls the ring back into the chronological layout
+    `make_windows` consumes, entirely with gathers (jit-safe, no host sync).
+
+    ring_y: [S, cap, n], ring_u: [S, cap, m] — per-slot rings where sample i
+      of slot s lives at column i % cap; count: [S] total samples written.
+    slots: [B] int32 rows to extract.  Requires count[slots] >= length+1
+      (caller-checked; earlier columns are stale/zero otherwise).
+    Returns (ys [B, length+1, n], us [B, length, m]) where us[t] is the input
+    held during ys step t -> t+1 (the `make_windows` alignment).
+    """
+    cap = ring_y.shape[1]
+    end = count[slots]                                           # [B]
+    idx = (end[:, None] + jnp.arange(length + 1)[None, :]
+           - (length + 1)) % cap                                 # [B, length+1]
+    rows = jnp.broadcast_to(slots[:, None], idx.shape)
+    ys = ring_y[rows, idx]
+    us = ring_u[rows[:, :-1], idx[:, :-1]]
+    return ys, us
+
+
+def make_ring_windows(ring_y, ring_u, count, slots, *, window: int,
+                      stride: int | None = None, length: int):
+    """Sliding windows over the newest `length` ring steps, grouped per slot.
+
+    Returns (y_win [B, N, k+1, n], u_win [B, N, k, m]) with k = window and
+    N = (length - window)//stride + 1 — bitwise identical to running
+    `make_windows` on the chronological trace of each slot.
+    """
+    ys, us = ring_latest(ring_y, ring_u, count, slots, length)
+    y_win, u_win = make_windows(ys, us, window, stride)
+    B = ys.shape[0]
+    N = y_win.shape[0] // B
+    return (y_win.reshape(B, N, window + 1, ys.shape[-1]),
+            u_win.reshape(B, N, window, us.shape[-1]))
 
 
 @dataclass

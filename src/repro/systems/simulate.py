@@ -66,11 +66,13 @@ def register_systems():
     from repro.systems.lorenz import Lorenz
     from repro.systems.lotka_volterra import LotkaVolterra
     from repro.systems.pathogen import PathogenicAttack
+    from repro.systems.van_der_pol import VanDerPol
 
     REGISTRY.update({
         "lotka_volterra": LotkaVolterra,
         "lorenz": Lorenz,
         "f8_crusader": F8Crusader,
         "pathogenic_attack": PathogenicAttack,
+        "van_der_pol": VanDerPol,
     })
     return REGISTRY

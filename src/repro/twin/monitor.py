@@ -1,0 +1,95 @@
+"""Divergence guard: does the deployed twin still match reality?
+
+The paper's safety case (mid-air collision avoidance) rests on the deployed
+model staying faithful to the physical system it shadows.  The guard closes
+that loop: every serving tick it RK4-rolls each deployed theta forward over
+the NEWEST telemetry window (same integrator the twin was recovered with —
+kernels/rk4) and scores the normalized rollout error against what the sensors
+actually reported.
+
+    score = mean((SOLVE(y_0, theta, U) - Y)^2) / (var(Y) + eps)
+
+Variance normalization makes one threshold meaningful across systems with
+wildly different state magnitudes (F-8 angle-of-attack radians vs Lorenz
+tens).  A diverged model frequently goes unstable under rollout; non-finite
+errors are clamped to a large finite score so the guard fires instead of
+propagating NaNs.
+
+Host-side hysteresis (`judge`) turns scores into events:
+  * score > refit_threshold  -> REFIT  (scheduler priority boost: the twin's
+    physics drifted — re-recover it)
+  * score > alert_threshold  -> ALERT  (the model is too wrong to trust for
+    prediction — the collision-avoidance abort signal)
+
+Scores are EMA-smoothed so a single noisy window does not flap the scheduler.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rk4.ops import rk4_poly_solve
+
+__all__ = ["GuardConfig", "GuardEvent", "DivergenceGuard"]
+
+_BLOWUP_SCORE = 1e6     # score assigned to non-finite (unstable) rollouts
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    window: int = 32                 # telemetry steps rolled per check
+    refit_threshold: float = 0.1
+    alert_threshold: float = 1.0
+    ema: float = 0.5                 # new-score weight in the EMA
+
+
+@dataclass(frozen=True)
+class GuardEvent:
+    twin_id: int
+    kind: str        # "REFIT" | "ALERT"
+    score: float
+    tick: int
+
+
+class DivergenceGuard:
+    def __init__(self, library, dt: float, cfg: GuardConfig = GuardConfig(),
+                 *, use_pallas: bool = False, interpret: bool = True):
+        self.lib = library
+        self.dt = dt
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+
+    # ------------------------------------------------------------------ #
+    @partial(jax.jit, static_argnames=("self",))
+    def score(self, theta, ys, us):
+        """Normalized rollout error per twin (fused over the whole store).
+
+        theta: [B, n, L]; ys: [B, k+1, n] newest telemetry; us: [B, k, m].
+        Returns [B] float32 — finite even when the rollout diverges.
+        """
+        y_est = rk4_poly_solve(theta, ys[:, 0, :], us, dt=self.dt,
+                               library=self.lib, use_pallas=self.use_pallas,
+                               interpret=self.interpret)
+        num = jnp.mean(jnp.square(y_est - ys), axis=(1, 2))
+        den = jnp.mean(jnp.square(ys - jnp.mean(ys, axis=1, keepdims=True)),
+                       axis=(1, 2)) + 1e-6
+        return jnp.nan_to_num(num / den, nan=_BLOWUP_SCORE,
+                              posinf=_BLOWUP_SCORE)
+
+    # ------------------------------------------------------------------ #
+    def smooth(self, prev: float, score: float) -> float:
+        """EMA update used by the server when folding scores into records."""
+        a = self.cfg.ema
+        return a * min(float(score), _BLOWUP_SCORE) + (1.0 - a) * prev
+
+    def judge(self, twin_id: int, score: float, tick: int) -> GuardEvent | None:
+        """Threshold an (already smoothed) score into an event, or None."""
+        if score > self.cfg.alert_threshold:
+            return GuardEvent(twin_id, "ALERT", float(score), tick)
+        if score > self.cfg.refit_threshold:
+            return GuardEvent(twin_id, "REFIT", float(score), tick)
+        return None

@@ -1,0 +1,150 @@
+"""Slot-based refit scheduling: thousands of twins, a bounded compute budget.
+
+Mirrors serve/engine.ServeEngine's admission pattern: a FIXED number of refit
+slots (the FleetMerinda fleet axis — one fused train_step advances all of
+them), with twins admitted into and evicted from slots dynamically.  The
+device-side math stays static-shape; all policy runs here on the host over a
+small registry of `TwinRecord`s.
+
+Priority model (computed per twin, higher = refit sooner):
+
+    priority = staleness_weight * staleness + divergence_weight * divergence
+
+  * staleness   — samples ingested since the twin's model was last deployed,
+    normalized by the refit window span; a never-deployed twin gets a +1
+    bonus (it has NO model, the worst kind of stale).
+  * divergence  — the guard score from twin/monitor.py (normalized rollout
+    error of the deployed model on the newest telemetry).  This is the
+    collision-avoidance signal: a twin whose physics changed outranks every
+    merely-stale twin.
+
+Slot turnover:
+  * free slots are filled by the highest-priority READY twins (enough samples
+    for a full window batch);
+  * a resident twin can be PREEMPTED by a waiting twin whose priority exceeds
+    the resident's by `evict_margin`, but only after `min_residency` ticks
+    (refits must get enough steps to converge before the slot churns);
+  * a resident twin that has both converged (>= `max_residency` ticks) and
+    gone quiet (divergence below `release_divergence`) RELEASES its slot
+    voluntarily — the mechanism that lets a big fleet rotate through a small
+    slot pool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "RefitScheduler"]
+
+
+@dataclass
+class TwinRecord:
+    """Host-side registry entry for one tracked object."""
+    twin_id: int
+    ring_slot: int                    # row in TelemetryRing
+    refit_slot: int | None = None     # FleetMerinda slot, None if waiting
+    samples: int = 0                  # total telemetry ingested
+    samples_at_deploy: int = 0
+    deployed: bool = False            # has a theta in the serving store
+    deploy_tick: int = -1
+    admitted_tick: int = -1
+    residency: int = 0                # ticks spent in current slot
+    steps_in_slot: int = 0            # train steps in current slot
+    divergence: float = 0.0           # EMA guard score
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    slots: int
+    min_samples: int                  # readiness: samples for one window batch
+    staleness_weight: float = 1.0
+    divergence_weight: float = 4.0
+    evict_margin: float = 0.5         # challenger must beat resident by this
+    min_residency: int = 8            # ticks before preemption allowed
+    max_residency: int = 64           # ticks before voluntary release allowed
+    release_divergence: float = 0.05  # ...and only if the twin tracks reality
+
+
+@dataclass
+class SchedulePlan:
+    admit: list = field(default_factory=list)    # [(slot, twin_id)]
+    evict: list = field(default_factory=list)    # [twin_id] preempted
+    release: list = field(default_factory=list)  # [twin_id] converged
+
+
+class RefitScheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ #
+    def priority(self, rec: TwinRecord) -> float:
+        cfg = self.cfg
+        staleness = (rec.samples - rec.samples_at_deploy) / max(cfg.min_samples, 1)
+        if not rec.deployed:
+            staleness += 1.0
+        return (cfg.staleness_weight * staleness
+                + cfg.divergence_weight * rec.divergence)
+
+    def ready(self, rec: TwinRecord) -> bool:
+        return rec.samples >= self.cfg.min_samples
+
+    # ------------------------------------------------------------------ #
+    def plan(self, twins: dict[int, TwinRecord]) -> SchedulePlan:
+        """Decide this tick's slot turnover.  Pure: mutates nothing; the
+        server applies the plan (device-side slot resets + record updates).
+
+        Iteration is in twin_id order so equal-priority decisions are
+        deterministic across runs.
+        """
+        cfg = self.cfg
+        plan = SchedulePlan()
+        residents = sorted((r for r in twins.values()
+                            if r.refit_slot is not None),
+                           key=lambda r: r.twin_id)
+        waiting = sorted((r for r in twins.values()
+                          if r.refit_slot is None and self.ready(r)),
+                         key=lambda r: (-self.priority(r), r.twin_id))
+
+        # voluntary release: converged, healthy residents hand back slots.
+        # A resident stuck far past max_residency without converging is
+        # released too (its divergence priority would otherwise let it starve
+        # the waiting queue indefinitely).
+        free: list[int] = sorted(set(range(cfg.slots))
+                                 - {r.refit_slot for r in residents})
+        kept: list[TwinRecord] = []
+        # release only for waiting twins the already-free slots cannot
+        # absorb — releasing more would idle slots and throw away converged
+        # training state
+        releasable = len(waiting) - len(free)
+        for r in residents:
+            healthy = r.deployed and r.divergence < cfg.release_divergence
+            stuck = r.residency >= 2 * cfg.max_residency
+            if (len(plan.release) < releasable
+                    and ((r.residency >= cfg.max_residency and healthy)
+                         or stuck)):
+                plan.release.append(r.twin_id)
+                free.append(r.refit_slot)
+            else:
+                kept.append(r)
+
+        # fill free slots with the best waiting twins
+        free.sort()
+        for slot in free:
+            if not waiting:
+                break
+            plan.admit.append((slot, waiting.pop(0).twin_id))
+
+        # preemption: strongest challengers vs weakest eligible residents
+        evictable = sorted((r for r in kept
+                            if r.residency >= cfg.min_residency),
+                           key=lambda r: (self.priority(r), r.twin_id))
+        for r in evictable:
+            if not waiting:
+                break
+            challenger = waiting[0]
+            if self.priority(challenger) > self.priority(r) + cfg.evict_margin:
+                waiting.pop(0)
+                plan.evict.append(r.twin_id)
+                plan.admit.append((r.refit_slot, challenger.twin_id))
+            else:
+                break   # residents below this one are even harder to beat
+        return plan

@@ -1,0 +1,402 @@
+"""TwinServer: the online serving loop — ingest, refit, deploy, guard.
+
+One `tick()` is a full serving cycle over the whole tracked fleet:
+
+    1. FLUSH    staged telemetry into the device ring buffers (one fused
+                scatter for every twin that produced samples this tick),
+    2. GUARD    RK4-roll every deployed theta over its newest window and
+                EMA-fold the normalized rollout error into each twin's
+                divergence score; emit REFIT/ALERT events on transitions,
+    3. SCHEDULE admit/evict/release twins over the bounded refit-slot pool
+                by staleness + divergence priority (twin/scheduler.py),
+    4. REFIT    `steps_per_tick` fused FleetMerinda.train_step calls over all
+                slots at once (the bounded compute budget),
+    5. DEPLOY   recover_all on slots whose twin has trained past
+                `deploy_after`, scattered into the serving theta store.
+
+Every fused call has a FIXED shape (refit_slots / max_twins), so steady-state
+serving compiles exactly once; unassigned refit slots are parked on a scratch
+ring row (`max_twins`) and unused recoveries land on a scratch theta row.
+
+Per-tick wall latency is recorded against `deadline_s`.  The paper's
+mission budget: beat the 5 s human-pilot reaction time 5x — refresh every
+deployed twin in <= 1 s.
+
+`predict(twin_id, horizon)` rolls the deployed model forward from the
+twin's newest telemetry — the collision-avoidance lookahead.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import FleetConfig, FleetMerinda
+from repro.core.merinda import MerindaConfig
+from repro.kernels.rk4.ops import rk4_poly_solve
+from repro.twin.monitor import DivergenceGuard, GuardConfig, GuardEvent
+from repro.twin.scheduler import (RefitScheduler, SchedulerConfig,
+                                  SchedulePlan, TwinRecord)
+from repro.twin.stream import RingConfig, TelemetryRing
+
+__all__ = ["TwinServerConfig", "TickReport", "TwinServer"]
+
+
+@dataclass(frozen=True)
+class TwinServerConfig:
+    merinda: MerindaConfig
+    max_twins: int                    # tracked-object capacity
+    refit_slots: int = 8              # concurrent refits (compute budget)
+    capacity: int = 512               # ring samples per twin
+    window: int = 24                  # refit window k
+    stride: int = 8
+    windows_per_twin: int = 16        # S_B per slot per train step
+    steps_per_tick: int = 2           # incremental train steps per tick
+    lr: float = 3e-3
+    sparsify_after: int = 60          # per-slot warmup (FleetConfig)
+    deploy_after: int = 24            # train steps before a slot's theta ships
+    promote_margin: float = 0.7       # candidate must score < margin * incumbent
+    deadline_s: float = 1.0           # 5x under the 5 s human-reaction budget
+    guard: GuardConfig = GuardConfig()
+    staleness_weight: float = 1.0
+    divergence_weight: float = 4.0
+    evict_margin: float = 0.5
+    min_residency: int = 8
+    max_residency: int = 64
+    release_divergence: float = 0.05
+    flush_pad: int = 8                # chunk-length quantum (bounds retraces)
+    seed: int = 0
+
+
+@dataclass
+class TickReport:
+    tick: int
+    latency_s: float
+    deadline_met: bool
+    loss: float | None                # mean refit loss (None: no active slot)
+    events: list[GuardEvent] = field(default_factory=list)
+    admitted: list = field(default_factory=list)   # [(slot, twin_id)]
+    evicted: list = field(default_factory=list)
+    released: list = field(default_factory=list)
+    n_active: int = 0                 # twins resident in refit slots
+    n_twins: int = 0                  # twins tracked
+
+
+class TwinServer:
+    def __init__(self, cfg: TwinServerConfig):
+        m = cfg.merinda
+        self.cfg = cfg
+        self.span = TelemetryRing.span(cfg.window, cfg.stride,
+                                       cfg.windows_per_twin)
+        self.min_samples = self.span + 1
+        if cfg.capacity < max(self.min_samples, cfg.guard.window + 1):
+            raise ValueError("ring capacity smaller than the refit/guard span")
+
+        self._scratch = cfg.max_twins     # scratch ring row + theta row
+        self.ring = TelemetryRing(RingConfig(
+            slots=cfg.max_twins + 1, capacity=cfg.capacity, n=m.n, m=m.m))
+        self._rstate = self.ring.init()
+
+        self.fleet = FleetMerinda(FleetConfig(
+            merinda=m, fleet=cfg.refit_slots,
+            windows_per_twin=cfg.windows_per_twin, lr=cfg.lr,
+            sparsify_after=cfg.sparsify_after))
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._fstate = self.fleet.init(self._split())
+
+        self.guard = DivergenceGuard(self.fleet.model.lib, m.dt, cfg.guard,
+                                     use_pallas=m.use_pallas,
+                                     interpret=m.interpret)
+        self.scheduler = RefitScheduler(SchedulerConfig(
+            slots=cfg.refit_slots, min_samples=self.min_samples,
+            staleness_weight=cfg.staleness_weight,
+            divergence_weight=cfg.divergence_weight,
+            evict_margin=cfg.evict_margin, min_residency=cfg.min_residency,
+            max_residency=cfg.max_residency,
+            release_divergence=cfg.release_divergence))
+
+        self.twins: dict[int, TwinRecord] = {}
+        self._guard_state: dict[int, str] = {}        # twin_id -> last kind
+        self._slot_ring = np.full((cfg.refit_slots,), self._scratch,
+                                  dtype=np.int32)     # refit slot -> ring row
+        self._slot_twin: dict[int, int] = {}          # refit slot -> twin_id
+        L = self.fleet.model.lib.size
+        self._theta = jnp.zeros((cfg.max_twins + 1, m.n, L))
+        self._staged: dict[int, list] = {}
+        self.tick_count = 0
+        self.latencies: list[float] = []
+        self.refresh_counts: list[int] = []   # active slots per recorded tick
+        self.events: list[GuardEvent] = []
+
+    # ------------------------------------------------------------------ #
+    def _split(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------------ #
+    def register(self, twin_id: int) -> TwinRecord:
+        """Start tracking an object; assigns its telemetry ring row."""
+        if twin_id in self.twins:
+            return self.twins[twin_id]
+        row = len(self.twins)
+        if row >= self.cfg.max_twins:
+            raise RuntimeError(f"server full ({self.cfg.max_twins} twins)")
+        rec = TwinRecord(twin_id=twin_id, ring_slot=row)
+        self.twins[twin_id] = rec
+        self._guard_state[twin_id] = "OK"
+        return rec
+
+    # ------------------------------------------------------------------ #
+    def ingest(self, twin_id: int, y, u=None):
+        """Stage telemetry for `twin_id`: y [n] or [C, n], u [m] or [C, m].
+
+        Host-side staging only — the device scatter happens once per tick in
+        the fused flush, so per-sample ingest stays cheap.
+        """
+        rec = self.register(twin_id)
+        y = np.atleast_2d(np.asarray(y, np.float32))
+        C = y.shape[0]
+        m = self.cfg.merinda.m
+        u = (np.zeros((C, m), np.float32) if u is None
+             else np.asarray(u, np.float32).reshape(C, m))
+        if C > self.cfg.capacity:
+            raise ValueError("chunk larger than ring capacity")
+        self._staged.setdefault(rec.twin_id, []).append((y, u))
+
+    def _flush(self) -> int:
+        if not self._staged:
+            return 0
+        cap, pad = self.cfg.capacity, self.cfg.flush_pad
+        merged = []
+        received = 0
+        for tid, chunks in sorted(self._staged.items()):
+            rec = self.twins[tid]
+            y = np.concatenate([c[0] for c in chunks], 0)
+            u = np.concatenate([c[1] for c in chunks], 0)
+            rec.samples += len(y)
+            received += len(y)
+            if len(y) > cap:
+                # a backlog longer than the ring would overwrite itself
+                # anyway; keep only the newest capacity-worth of samples
+                y, u = y[-cap:], u[-cap:]
+            merged.append((rec.ring_slot, y, u))
+        # pad BOTH axes to fixed quanta (rows with scratch/zero-count
+        # entries, columns per flush_pad) so the fused ingest does not
+        # recompile when the set of reporting twins varies tick to tick
+        B = int(-(-len(merged) // pad) * pad)
+        # cap the padded length at ring capacity: every chunk is already
+        # truncated to <= cap, but rounding up could lap a non-multiple ring
+        C = min(int(-(-max(len(y) for _, y, _ in merged) // pad) * pad), cap)
+        n, m = self.cfg.merinda.n, self.cfg.merinda.m
+        ys = np.zeros((B, C, n), np.float32)
+        us = np.zeros((B, C, m), np.float32)
+        slots = np.full((B,), self._scratch, np.int32)
+        counts = np.zeros((B,), np.int32)
+        for i, (row, y, u) in enumerate(merged):
+            ys[i, :len(y)] = y
+            us[i, :len(y)] = u
+            slots[i] = row
+            counts[i] = len(y)
+        self._rstate = self.ring.ingest(
+            self._rstate, jnp.asarray(slots), jnp.asarray(ys),
+            jnp.asarray(us), jnp.asarray(counts))
+        self._staged.clear()
+        return received
+
+    # ------------------------------------------------------------------ #
+    def deploy(self, twin_id: int, theta) -> None:
+        """Install a theta for `twin_id` directly (warm start from an offline
+        recovery — lets a fleet come up serving while online refits rotate)."""
+        rec = self.register(twin_id)
+        self._theta = self._theta.at[rec.ring_slot].set(jnp.asarray(theta))
+        rec.deployed = True
+        rec.samples_at_deploy = rec.samples
+        rec.deploy_tick = self.tick_count
+
+    # ------------------------------------------------------------------ #
+    def _update_divergence(self) -> list[GuardEvent]:
+        gw = self.cfg.guard.window
+        live = [r for r in self.twins.values()
+                if r.deployed and r.samples >= gw + 1]
+        if not live:
+            return []
+        rows = jnp.arange(self.cfg.max_twins)
+        ys, us = self.ring.latest(self._rstate, rows, gw)
+        scores = np.asarray(self.guard.score(self._theta[:-1], ys, us))
+        events: list[GuardEvent] = []
+        for rec in live:
+            rec.divergence = self.guard.smooth(rec.divergence,
+                                               scores[rec.ring_slot])
+            ev = self.guard.judge(rec.twin_id, rec.divergence, self.tick_count)
+            kind = ev.kind if ev else "OK"
+            if kind != self._guard_state[rec.twin_id]:
+                self._guard_state[rec.twin_id] = kind
+                if ev:
+                    events.append(ev)
+        self.events.extend(events)
+        return events
+
+    # ------------------------------------------------------------------ #
+    def _slot_windows(self):
+        rows = jnp.asarray(self._slot_ring)
+        return self.ring.windows(self._rstate, rows, window=self.cfg.window,
+                                 stride=self.cfg.stride, length=self.span)
+
+    def _apply_plan(self, plan: SchedulePlan) -> None:
+        for tid in plan.evict + plan.release:
+            rec = self.twins[tid]
+            self._slot_ring[rec.refit_slot] = self._scratch
+            self._slot_twin.pop(rec.refit_slot, None)
+            rec.refit_slot = None
+            rec.residency = rec.steps_in_slot = 0
+        for slot, tid in plan.admit:
+            rec = self.twins[tid]
+            y_w, u_w = self.ring.windows(
+                self._rstate, jnp.asarray([rec.ring_slot]),
+                window=self.cfg.window, stride=self.cfg.stride,
+                length=self.span)
+            self._fstate = self.fleet.reset_slot(
+                self._fstate, jnp.int32(slot), self._split(), y_w[0], u_w[0])
+            rec.refit_slot = slot
+            rec.admitted_tick = self.tick_count
+            rec.residency = rec.steps_in_slot = 0
+            self._slot_ring[slot] = rec.ring_slot
+            self._slot_twin[slot] = tid
+
+    def _refit(self) -> float | None:
+        if not self._slot_twin:
+            return None
+        y_win, u_win = self._slot_windows()
+        loss_vec = None
+        for _ in range(self.cfg.steps_per_tick):
+            self._fstate, loss_vec, _ = self.fleet.train_step_per_slot(
+                self._fstate, y_win, u_win)
+        # report loss over ASSIGNED slots only — scratch-parked slots train
+        # on zero windows and would dilute the mean toward zero
+        loss = float(np.mean(np.asarray(loss_vec)[sorted(self._slot_twin)]))
+        deployable = []
+        for slot, tid in self._slot_twin.items():
+            rec = self.twins[tid]
+            rec.steps_in_slot += self.cfg.steps_per_tick
+            rec.residency += 1
+            if rec.steps_in_slot >= self.cfg.deploy_after:
+                deployable.append(slot)
+        if deployable:
+            self._promote(deployable, y_win, u_win)
+        return loss
+
+    def _promote(self, deployable, y_win, u_win) -> None:
+        """Shadow-evaluate slot recoveries and deploy only improvements.
+
+        Both the candidate theta and the incumbent are rolled over the same
+        newest telemetry (one fused guard call each).  Against a HEALTHY
+        incumbent (score < refit_threshold) the candidate must beat it by
+        `promote_margin` — "good enough" is not enough to replace a model
+        that tracks reality better.  Against a missing/diverged incumbent the
+        candidate ships if it is outright good or a margin improvement.
+        """
+        thresh = self.cfg.guard.refit_threshold
+        rows = jnp.asarray(self._slot_ring)
+        thetas = self.fleet.recover_all(self._fstate, y_win, u_win)
+        ys_g, us_g = self.ring.latest(self._rstate, rows,
+                                      self.cfg.guard.window)
+        cand = np.asarray(self.guard.score(thetas, ys_g, us_g))
+        inc = np.asarray(self.guard.score(self._theta[rows], ys_g, us_g))
+        targets = np.full((self.cfg.refit_slots,), self._scratch,
+                          dtype=np.int32)
+        promoted = set()
+        for slot in deployable:
+            rec = self.twins[self._slot_twin[slot]]
+            healthy_inc = rec.deployed and inc[slot] < thresh
+            better = cand[slot] < self.cfg.promote_margin * inc[slot]
+            if better or (not healthy_inc and cand[slot] < thresh):
+                targets[slot] = rec.ring_slot
+                promoted.add(slot)
+            elif healthy_inc:
+                # candidate lost, but the serving model is still healthy:
+                # count this as a completed review so the twin's staleness
+                # resets and it stops hogging a refit slot.
+                rec.samples_at_deploy = rec.samples
+        if promoted:
+            self._theta = self._theta.at[jnp.asarray(targets)].set(thetas)
+        for slot in promoted:
+            rec = self.twins[self._slot_twin[slot]]
+            rec.deployed = True
+            rec.samples_at_deploy = rec.samples
+            rec.deploy_tick = self.tick_count
+            rec.divergence = float(min(cand[slot], 1e6))
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> TickReport:
+        """One full serving cycle; see module docstring for the five stages."""
+        t0 = time.perf_counter()
+        self.tick_count += 1
+        self._flush()
+        events = self._update_divergence()
+        plan = self.scheduler.plan(self.twins)
+        self._apply_plan(plan)
+        loss = self._refit()
+        jax.block_until_ready(self._theta)
+        latency = time.perf_counter() - t0
+        self.latencies.append(latency)
+        self.refresh_counts.append(len(self._slot_twin))
+        return TickReport(
+            tick=self.tick_count, latency_s=latency,
+            deadline_met=latency <= self.cfg.deadline_s, loss=loss,
+            events=events, admitted=plan.admit, evicted=plan.evict,
+            released=plan.release, n_active=len(self._slot_twin),
+            n_twins=len(self.twins))
+
+    # ------------------------------------------------------------------ #
+    def predict(self, twin_id: int, horizon: int, us=None):
+        """Roll the deployed model `horizon` steps from the newest telemetry.
+
+        Returns ys [horizon+1, n] (index 0 = the newest observed state).
+        """
+        rec = self.twins[twin_id]
+        if not rec.deployed:
+            raise RuntimeError(f"twin {twin_id} has no deployed model")
+        if rec.samples < 1:
+            # the ring is still all zeros — a rollout would silently start
+            # from the origin instead of the twin's actual state
+            raise RuntimeError(f"twin {twin_id} has no telemetry to "
+                               "predict from")
+        ys, _ = self.ring.latest(self._rstate,
+                                 jnp.asarray([rec.ring_slot]), 0)
+        y0 = ys[:, -1, :]                                    # [1, n]
+        m = self.cfg.merinda.m
+        us = (jnp.zeros((1, horizon, m)) if us is None
+              else jnp.asarray(us, jnp.float32).reshape(1, horizon, m))
+        out = rk4_poly_solve(self._theta[rec.ring_slot][None], y0, us,
+                             dt=self.cfg.merinda.dt, library=self.fleet.model.lib,
+                             use_pallas=self.cfg.merinda.use_pallas,
+                             interpret=self.cfg.merinda.interpret)
+        return out[0]
+
+    # ------------------------------------------------------------------ #
+    def reset_latency_stats(self) -> None:
+        """Drop recorded latencies (benchmarks call this after jit warmup)."""
+        self.latencies.clear()
+        self.refresh_counts.clear()
+
+    def latency_summary(self) -> dict:
+        """p50/p99 refresh latency vs the deadline + serving throughput."""
+        lat = np.asarray(self.latencies)
+        if lat.size == 0:
+            return {"ticks": 0}
+        total = float(lat.sum())
+        return {
+            "ticks": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(lat.max() * 1e3),
+            "deadline_s": self.cfg.deadline_s,
+            "violations": int((lat > self.cfg.deadline_s).sum()),
+            # actual slot-refreshes performed, not pool capacity: idle slots
+            # don't count toward serving throughput
+            "twin_refreshes_per_s":
+                sum(self.refresh_counts) / max(total, 1e-9),
+        }

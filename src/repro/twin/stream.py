@@ -1,0 +1,126 @@
+"""Per-twin telemetry ring buffers as device arrays with a fused ingest.
+
+Online twinning is a streaming workload: every tracked object produces a
+(y_t, u_t) sample per sensor tick, and the refit path consumes the NEWEST
+sliding windows.  `TelemetryRing` keeps one fixed-capacity ring per twin as a
+single set of device arrays, so a full serving tick does exactly one jitted
+scatter (`ingest`) and one jitted gather (`windows` / `latest`) for the whole
+fleet — no per-twin host round-trips, no reallocation, bounded memory.
+
+State layout (a plain pytree, shardable over the slot axis like every other
+fleet-axis array in this repo):
+    y     [S, cap, n]   state telemetry
+    u     [S, cap, m]   input telemetry (u_t held during y_t -> y_{t+1})
+    count [S] int32     total samples ever written per slot (write head
+                        = count % cap; monotonically increasing)
+
+Row `S-1` is conventionally reserved by twin/server.py as a scratch row so
+fixed-shape fused calls can park unassigned refit slots on it; the ring
+itself has no special-casing.
+
+Window extraction reuses data/pipeline.ring_latest / make_ring_windows, so
+windows taken from the ring are bitwise identical to `make_windows` on the
+equivalent chronological trace (tested in tests/test_twin_stream.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import make_ring_windows, ring_latest
+
+__all__ = ["RingConfig", "TelemetryRing"]
+
+
+@dataclass(frozen=True)
+class RingConfig:
+    slots: int       # number of per-twin rings (tracked-object capacity)
+    capacity: int    # samples per ring; windows must fit inside it
+    n: int           # state dim
+    m: int           # input dim
+
+
+class TelemetryRing:
+    def __init__(self, cfg: RingConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ #
+    def init(self):
+        cfg = self.cfg
+        return {
+            "y": jnp.zeros((cfg.slots, cfg.capacity, cfg.n)),
+            "u": jnp.zeros((cfg.slots, cfg.capacity, cfg.m)),
+            "count": jnp.zeros((cfg.slots,), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------ #
+    @partial(jax.jit, static_argnames=("self",))
+    def ingest(self, state, slots, ys, us, counts):
+        """Fused scatter of one telemetry chunk per slot.
+
+        slots:  [B] int32, DISTINCT ring rows (one chunk per twin per call).
+        ys:     [B, C, n], us: [B, C, m] — chunk buffers, possibly padded.
+        counts: [B] int32 — valid prefix length of each chunk (<= C); padded
+                tail positions are written back with their current values, so
+                callers can batch twins with unequal chunk sizes into one
+                fixed-shape call (the retrace-free flush in twin/server.py).
+
+        Requires C <= capacity (one call never laps its own ring).
+        """
+        cfg = self.cfg
+        C = ys.shape[1]
+        assert C <= cfg.capacity, "chunk may not lap the ring"
+        offs = jnp.arange(C)[None, :]                        # [1, C]
+        cols = (state["count"][slots][:, None] + offs) % cfg.capacity
+        valid = offs < counts[:, None]                       # [B, C]
+        rows = jnp.broadcast_to(slots[:, None], cols.shape)
+        old_y = state["y"][rows, cols]
+        old_u = state["u"][rows, cols]
+        y = state["y"].at[rows, cols].set(
+            jnp.where(valid[..., None], ys, old_y))
+        u = state["u"].at[rows, cols].set(
+            jnp.where(valid[..., None], us, old_u))
+        count = state["count"].at[slots].add(counts)
+        return {"y": y, "u": u, "count": count}
+
+    # ------------------------------------------------------------------ #
+    @partial(jax.jit, static_argnames=("self", "length"))
+    def latest(self, state, slots, length: int):
+        """Newest `length+1` samples per slot, chronological.
+
+        Returns (ys [B, length+1, n], us [B, length, m]); requires
+        count[slots] >= length+1 (host-checked by the server's readiness
+        gate — stale columns come back otherwise).
+        """
+        return ring_latest(state["y"], state["u"], state["count"], slots,
+                           length)
+
+    # ------------------------------------------------------------------ #
+    @partial(jax.jit, static_argnames=("self", "window", "stride", "length"))
+    def windows(self, state, slots, *, window: int, stride: int | None = None,
+                length: int):
+        """Sliding windows over the newest `length` steps of each slot.
+
+        Returns (y_win [B, N, k+1, n], u_win [B, N, k, m]) — the per-twin
+        window batches FleetMerinda.train_step consumes; parity with
+        data/pipeline.make_windows on the chronological trace.
+        """
+        return make_ring_windows(state["y"], state["u"], state["count"],
+                                 slots, window=window, stride=stride,
+                                 length=length)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def span(window: int, stride: int, n_windows: int) -> int:
+        """Ring steps needed so `windows(..., length=span)` yields exactly
+        `n_windows` windows (the server's per-slot batch shape)."""
+        return stride * (n_windows - 1) + window
+
+    @partial(jax.jit, static_argnames=("self",))
+    def clear(self, state, slot):
+        """Logically empty one ring (eviction of a tracked object)."""
+        return {"y": state["y"], "u": state["u"],
+                "count": state["count"].at[slot].set(0)}

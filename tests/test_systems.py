@@ -10,11 +10,13 @@ from repro.systems.f8_crusader import F8Crusader
 from repro.systems.lorenz import Lorenz
 from repro.systems.lotka_volterra import LotkaVolterra
 from repro.systems.pathogen import PathogenicAttack
-from repro.systems.simulate import simulate, simulate_batch
+from repro.systems.simulate import register_systems, simulate, simulate_batch
+from repro.systems.van_der_pol import VanDerPol
 
 jax.config.update("jax_platform_name", "cpu")
 
-SYSTEMS = [LotkaVolterra(), Lorenz(), F8Crusader(), PathogenicAttack()]
+SYSTEMS = [LotkaVolterra(), Lorenz(), F8Crusader(), PathogenicAttack(),
+           VanDerPol()]
 
 
 def test_lorenz_rhs_matches_handcoded():
@@ -48,6 +50,21 @@ def test_f8_dimension_scaling():
     assert bool(jnp.all(jnp.isfinite(tr.ys)))
 
 
+def test_van_der_pol_rhs_matches_handcoded():
+    s = VanDerPol(mu=1.5)
+    y = jnp.asarray([[0.7, -0.4]])
+    u = jnp.asarray([[0.25]])
+    y0, y1, uu = 0.7, -0.4, 0.25
+    expect = [y1, 1.5 * (1 - y0 * y0) * y1 - y0 + uu]
+    np.testing.assert_allclose(np.asarray(s.rhs(y, u))[0], expect, rtol=1e-6)
+
+
+def test_van_der_pol_registered():
+    reg = register_systems()
+    assert reg["van_der_pol"] is VanDerPol
+    assert VanDerPol().spec.order == 3
+
+
 @pytest.mark.parametrize("system", SYSTEMS, ids=lambda s: s.spec.name)
 def test_traces_finite(system):
     tr = simulate_batch(system, jax.random.PRNGKey(1), batch=3, horizon=150)
@@ -57,7 +74,7 @@ def test_traces_finite(system):
 
 
 @pytest.mark.parametrize("system", [LotkaVolterra(), Lorenz(),
-                                    PathogenicAttack()],
+                                    PathogenicAttack(), VanDerPol()],
                          ids=lambda s: s.spec.name)
 def test_identifiable_via_stlsq(system):
     """Clean traces + STLSQ must recover the true coefficients — the

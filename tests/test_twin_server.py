@@ -1,0 +1,244 @@
+"""Online twin server: scheduling order, admit/evict, guard, predict."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.merinda import MerindaConfig
+from repro.systems.lotka_volterra import LotkaVolterra
+from repro.systems.simulate import simulate_batch
+from repro.twin.monitor import DivergenceGuard, GuardConfig
+from repro.twin.scheduler import RefitScheduler, SchedulerConfig, TwinRecord
+from repro.twin.server import TwinServer, TwinServerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------- #
+# scheduler policy (pure host logic, no JAX)
+# --------------------------------------------------------------------- #
+def _sched(**kw):
+    d = dict(slots=2, min_samples=10, min_residency=2, max_residency=8,
+             evict_margin=0.5)
+    d.update(kw)
+    return RefitScheduler(SchedulerConfig(**d))
+
+
+def test_scheduler_fills_free_slots_by_priority():
+    s = _sched()
+    twins = {i: TwinRecord(twin_id=i, ring_slot=i, samples=10 + i)
+             for i in range(4)}
+    twins[1].divergence = 5.0            # highest priority
+    plan = s.plan(twins)
+    assert plan.admit[0] == (0, 1)       # diverged twin wins slot 0
+    assert len(plan.admit) == 2 and not plan.evict
+
+
+def test_scheduler_respects_readiness():
+    s = _sched()
+    twins = {0: TwinRecord(twin_id=0, ring_slot=0, samples=3)}   # < min
+    assert s.plan(twins).admit == []
+
+
+def test_scheduler_preempts_only_after_min_residency():
+    s = _sched()
+    resident = TwinRecord(twin_id=0, ring_slot=0, refit_slot=0, samples=50,
+                          deployed=True, samples_at_deploy=50, residency=1)
+    challenger = TwinRecord(twin_id=1, ring_slot=1, samples=50,
+                            divergence=9.0, deployed=True)
+    other = TwinRecord(twin_id=2, ring_slot=2, refit_slot=1, samples=50,
+                       deployed=True, samples_at_deploy=50, residency=1)
+    twins = {0: resident, 1: challenger, 2: other}
+    assert s.plan(twins).evict == []             # too fresh to preempt
+    resident.residency = other.residency = 5
+    plan = s.plan(twins)
+    assert plan.evict == [0]                     # weakest resident goes
+    assert (0, 1) in plan.admit
+
+
+def _resident(tid, slot, **kw):
+    d = dict(twin_id=tid, ring_slot=tid, refit_slot=slot, samples=50,
+             deployed=True, samples_at_deploy=50, residency=4)
+    d.update(kw)
+    return TwinRecord(**d)
+
+
+def test_scheduler_releases_converged_resident():
+    s = _sched()
+    resident = _resident(0, 0, residency=9, divergence=0.01)
+    other = _resident(2, 1)                    # keeps the pool full
+    waiting = TwinRecord(twin_id=1, ring_slot=1, samples=50)
+    plan = s.plan({0: resident, 1: waiting, 2: other})
+    assert plan.release == [0]
+    assert (0, 1) in plan.admit
+
+
+def test_scheduler_releases_stuck_resident():
+    """A non-converging resident cannot hold its slot forever."""
+    s = _sched()
+    resident = _resident(0, 0, residency=16, divergence=50.0)  # 2*max_res
+    other = _resident(2, 1)
+    waiting = TwinRecord(twin_id=1, ring_slot=1, samples=50)
+    plan = s.plan({0: resident, 1: waiting, 2: other})
+    assert plan.release == [0]
+
+
+def test_scheduler_free_slots_absorb_waiting_without_release():
+    """When idle slots can take every waiting twin, converged residents
+    keep their slots (and their training state)."""
+    s = _sched()
+    resident = _resident(0, 0, residency=9, divergence=0.01)
+    waiting = TwinRecord(twin_id=1, ring_slot=1, samples=50)
+    plan = s.plan({0: resident, 1: waiting})   # slot 1 is free
+    assert plan.release == [] and plan.evict == []
+    assert plan.admit == [(1, 1)]
+
+
+# --------------------------------------------------------------------- #
+# server end-to-end (tiny model so CI stays fast)
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def lv_world():
+    sys_ = LotkaVolterra()
+    tr = simulate_batch(sys_, jax.random.PRNGKey(0), batch=4, horizon=400,
+                        noise_std=0.002)
+    return sys_, np.asarray(tr.ys_noisy), np.asarray(tr.us)
+
+
+def _server(sys_, **kw):
+    d = dict(
+        merinda=MerindaConfig(n=2, m=0, order=2, hidden=8, head_hidden=8,
+                              n_active=4, dt=sys_.spec.dt),
+        max_twins=6, refit_slots=2, capacity=128, window=16, stride=8,
+        windows_per_twin=4, steps_per_tick=1, deploy_after=2,
+        min_residency=2, max_residency=6,
+        guard=GuardConfig(window=16))
+    d.update(kw)
+    return TwinServer(TwinServerConfig(**d))
+
+
+def test_server_admits_and_refits(lv_world):
+    sys_, ys, us = lv_world
+    srv = _server(sys_)
+    chunk = 10
+    reports = []
+    for t in range(12):
+        for i in range(4):
+            srv.ingest(i, ys[i, t * chunk:(t + 1) * chunk],
+                       us[i, t * chunk:(t + 1) * chunk])
+        reports.append(srv.tick())
+    # both slots busy once twins are ready; min_samples = 8*3+16+1 = 41
+    assert reports[-1].n_active == 2
+    assert reports[-1].n_twins == 4
+    admitted = [a for r in reports for a in r.admitted]
+    assert len(admitted) >= 2
+    # refit losses are finite once slots are active
+    assert all(np.isfinite(r.loss) for r in reports if r.loss is not None)
+    # every tick's latency was recorded
+    assert len(srv.latencies) == 12
+    # per-slot step counters advanced (incremental stepping)
+    assert int(srv._fstate["steps"].max()) > 0
+
+
+def test_server_slot_turnover_rotates_fleet(lv_world):
+    """With 4 ready twins and 2 slots, releases/evictions must rotate the
+    pool: every twin gets slot time eventually."""
+    sys_, ys, us = lv_world
+    srv = _server(sys_, max_residency=3, min_residency=1)
+    chunk = 10
+    slotted = set()
+    for t in range(30):
+        for i in range(4):
+            lo = (t * chunk) % 300
+            srv.ingest(i, ys[i, lo:lo + chunk], us[i, lo:lo + chunk])
+        rep = srv.tick()
+        slotted |= {tid for _, tid in rep.admitted}
+    assert slotted == {0, 1, 2, 3}
+
+
+def test_guard_fires_on_perturbed_dynamics(lv_world):
+    """Deploy the TRUE model, then the truth with flipped signs: the guard
+    must stay quiet on the former and fire REFIT/ALERT on the latter."""
+    sys_, ys, us = lv_world
+    srv = _server(sys_, refit_slots=2, deploy_after=10 ** 6)  # no auto-deploy
+    lib = srv.fleet.model.lib
+    true = sys_.true_theta(lib)
+    chunk = 10
+    for t in range(6):    # enough samples for the guard window
+        for i in range(2):
+            srv.ingest(i, ys[i, t * chunk:(t + 1) * chunk],
+                       us[i, t * chunk:(t + 1) * chunk])
+        srv.tick()
+    srv.deploy(0, true)
+    srv.deploy(1, -true)           # wrong physics
+    events = []
+    for t in range(6, 10):
+        for i in range(2):
+            srv.ingest(i, ys[i, t * chunk:(t + 1) * chunk],
+                       us[i, t * chunk:(t + 1) * chunk])
+        events += srv.tick().events
+    assert srv.twins[0].divergence < 0.05          # true model tracks
+    assert srv.twins[1].divergence > 0.1           # wrong model diverges
+    kinds = {(e.twin_id, e.kind) for e in events}
+    assert any(tid == 1 for tid, _ in kinds)       # guard fired for twin 1
+    assert all(tid != 0 for tid, _ in kinds)       # ...and only for twin 1
+
+
+def test_flush_handles_backlog_beyond_capacity(lv_world):
+    """Telemetry staged faster than ticks must not crash the fused flush;
+    only the newest capacity-worth of samples survives."""
+    sys_, ys, us = lv_world
+    srv = _server(sys_, capacity=128)
+    srv.ingest(0, ys[0, :100], us[0, :100])
+    srv.ingest(0, ys[0, 100:200], us[0, 100:200])   # backlog: 200 > 128
+    srv.tick()
+    assert srv.twins[0].samples == 200              # telemetry accounting
+    assert int(srv._rstate["count"][0]) == 128      # ring kept the newest
+    yl, _ = srv.ring.latest(srv._rstate, jnp.asarray([0]), 10)
+    np.testing.assert_allclose(np.asarray(yl[0]), ys[0, 189:200], rtol=1e-6)
+
+
+def test_flush_capacity_not_multiple_of_pad(lv_world):
+    """flush_pad rounding of the chunk axis must not lap a ring whose
+    capacity is not a multiple of the pad quantum."""
+    sys_, ys, us = lv_world
+    srv = _server(sys_, capacity=100)           # 100 % 8 != 0
+    srv.ingest(0, ys[0, :97], us[0, :97])       # rounds to 104 without cap
+    srv.tick()
+    assert int(srv._rstate["count"][0]) == 97
+    yl, _ = srv.ring.latest(srv._rstate, jnp.asarray([0]), 5)
+    np.testing.assert_allclose(np.asarray(yl[0]), ys[0, 91:97], rtol=1e-6)
+
+
+def test_predict_shapes_and_rollout(lv_world):
+    sys_, ys, us = lv_world
+    srv = _server(sys_)
+    lib = srv.fleet.model.lib
+    srv.register(0)
+    for t in range(5):
+        srv.ingest(0, ys[0, t * 10:(t + 1) * 10], us[0, t * 10:(t + 1) * 10])
+    srv.tick()
+    with pytest.raises(RuntimeError):
+        srv.predict(0, 10)                         # nothing deployed yet
+    srv.register(5)
+    srv.deploy(5, sys_.true_theta(lib))
+    with pytest.raises(RuntimeError):
+        srv.predict(5, 10)                         # deployed, no telemetry
+    srv.deploy(0, sys_.true_theta(lib))
+    out = srv.predict(0, 12)
+    assert out.shape == (13, 2)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # rollout starts from the newest observed state
+    np.testing.assert_allclose(np.asarray(out[0]), ys[0, 49], rtol=1e-5)
+
+
+def test_latency_summary_tracks_deadline(lv_world):
+    sys_, ys, us = lv_world
+    srv = _server(sys_)
+    for t in range(3):
+        srv.ingest(0, ys[0, t * 10:(t + 1) * 10], us[0, t * 10:(t + 1) * 10])
+        srv.tick()
+    s = srv.latency_summary()
+    assert s["ticks"] == 3 and s["p50_ms"] > 0 and s["deadline_s"] == 1.0
+    srv.reset_latency_stats()
+    assert srv.latency_summary() == {"ticks": 0}

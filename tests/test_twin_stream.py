@@ -1,0 +1,97 @@
+"""Telemetry ring buffers: wraparound, masked ingest, make_windows parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import make_windows
+from repro.twin.stream import RingConfig, TelemetryRing
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ring(slots=3, capacity=64, n=2, m=1):
+    r = TelemetryRing(RingConfig(slots=slots, capacity=capacity, n=n, m=m))
+    return r, r.init()
+
+
+def _push(ring, state, slot, ys, us):
+    return ring.ingest(state, jnp.asarray([slot]),
+                       jnp.asarray(ys[None]), jnp.asarray(us[None]),
+                       jnp.asarray([len(ys)]))
+
+
+def test_latest_returns_chronological_tail():
+    ring, st = _ring()
+    rng = np.random.RandomState(0)
+    ys = rng.randn(50, 2).astype(np.float32)
+    us = rng.randn(50, 1).astype(np.float32)
+    st = _push(ring, st, 1, ys, us)
+    yl, ul = ring.latest(st, jnp.asarray([1]), 20)
+    np.testing.assert_allclose(np.asarray(yl[0]), ys[-21:], rtol=1e-6)
+    # u alignment: u[t] is the input during y step t -> t+1
+    np.testing.assert_allclose(np.asarray(ul[0]), us[-21:-1], rtol=1e-6)
+
+
+def test_wraparound_preserves_order():
+    ring, st = _ring(capacity=64)
+    rng = np.random.RandomState(1)
+    ys = rng.randn(90, 2).astype(np.float32)   # 90 > 64: ring laps
+    us = rng.randn(90, 1).astype(np.float32)
+    st = _push(ring, st, 0, ys[:60], us[:60])
+    st = _push(ring, st, 0, ys[60:], us[60:])
+    assert int(st["count"][0]) == 90
+    yl, ul = ring.latest(st, jnp.asarray([0]), 40)
+    np.testing.assert_allclose(np.asarray(yl[0]), ys[-41:], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ul[0]), us[-41:-1], rtol=1e-6)
+
+
+def test_masked_ingest_ignores_padding():
+    """Padded chunk tails (counts < C) must not corrupt ring contents."""
+    ring, st = _ring()
+    rng = np.random.RandomState(2)
+    ys = rng.randn(2, 16, 2).astype(np.float32)
+    us = rng.randn(2, 16, 1).astype(np.float32)
+    counts = np.asarray([10, 16], np.int32)     # slot 0 chunk padded past 10
+    st = ring.ingest(st, jnp.asarray([0, 1]), jnp.asarray(ys),
+                     jnp.asarray(us), jnp.asarray(counts))
+    assert int(st["count"][0]) == 10 and int(st["count"][1]) == 16
+    y0, _ = ring.latest(st, jnp.asarray([0]), 9)
+    np.testing.assert_allclose(np.asarray(y0[0]), ys[0, :10], rtol=1e-6)
+    # next ingest lands right after the valid prefix, not after the pad
+    more = rng.randn(4, 2).astype(np.float32)
+    st = _push(ring, st, 0, more, np.zeros((4, 1), np.float32))
+    y0, _ = ring.latest(st, jnp.asarray([0]), 13)
+    np.testing.assert_allclose(np.asarray(y0[0]),
+                               np.concatenate([ys[0, :10], more]), rtol=1e-6)
+
+
+def test_windows_parity_with_make_windows():
+    """Ring windows == make_windows on the chronological trace, bitwise."""
+    ring, st = _ring(capacity=64)
+    rng = np.random.RandomState(3)
+    ys = rng.randn(80, 2).astype(np.float32)    # wraps the 64-ring
+    us = rng.randn(80, 1).astype(np.float32)
+    st = _push(ring, st, 2, ys[:50], us[:50])
+    st = _push(ring, st, 2, ys[50:], us[50:])
+    length = TelemetryRing.span(window=8, stride=4, n_windows=5)   # 24
+    y_w, u_w = ring.windows(st, jnp.asarray([2]), window=8, stride=4,
+                            length=length)
+    assert y_w.shape == (1, 5, 9, 2) and u_w.shape == (1, 5, 8, 1)
+    y_ref, u_ref = make_windows(jnp.asarray(ys[-length - 1:]),
+                                jnp.asarray(us[-length - 1:-1]), 8, 4)
+    np.testing.assert_array_equal(np.asarray(y_w[0]), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(u_w[0]), np.asarray(u_ref))
+
+
+def test_slots_are_independent():
+    ring, st = _ring()
+    a = np.ones((8, 2), np.float32)
+    b = 2 * np.ones((8, 2), np.float32)
+    z = np.zeros((8, 1), np.float32)
+    st = _push(ring, st, 0, a, z)
+    st = _push(ring, st, 1, b, z)
+    ya, _ = ring.latest(st, jnp.asarray([0]), 7)
+    yb, _ = ring.latest(st, jnp.asarray([1]), 7)
+    assert float(ya.mean()) == 1.0 and float(yb.mean()) == 2.0
+    st = ring.clear(st, jnp.int32(0))
+    assert int(st["count"][0]) == 0 and int(st["count"][1]) == 8
