@@ -1,0 +1,136 @@
+"""Scale benchmark: sharded serving from 64 to 10k tracked objects.
+
+Sweeps the `ShardedTwinServer` over fleet size x shard count with a FIXED
+per-shard guard budget and async ingestion enabled, and reports per-tick
+latency (p50/p99/max vs the 1 s refresh deadline), twin refreshes/s, and the
+per-stage cost breakdown.  The two claims under test:
+
+  * the sharded architecture keeps the serving tick inside the mission
+    deadline as the tracked fleet grows 64 -> 10k (shards absorb the load);
+  * guard cost per tick is O(budget), not O(twins): at fixed shards and
+    budget, guard_ms must stay flat (within 2x) from 1k -> 10k twins — the
+    `GuardRotation` contract, checked and printed at the end.
+
+Emitted to bench_out/online_scale.csv by benchmarks/run.py
+(`--only online_scale`); `--smoke` runs a tiny sweep for CI.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.merinda import MerindaConfig
+from repro.systems.f8_crusader import F8Crusader
+from repro.systems.simulate import simulate_batch
+from repro.twin.monitor import GuardConfig
+from repro.twin.server import TwinServerConfig
+from repro.twin.sharded import ShardedTwinConfig, ShardedTwinServer
+
+CHUNK = 8          # telemetry samples per twin per tick
+GUARD_BUDGET = 128 # per-shard rotating guard subset (fixed across the sweep)
+WARMUP = 18        # ticks excluded from stats: jit compile, slot fill, and
+                   # the first deploy/promote compilations all land in warmup
+
+
+def _serve_scale(n_twins: int, shards: int, ticks: int, *,
+                 guard_budget: int = GUARD_BUDGET, seed: int = 0) -> dict:
+    system = F8Crusader()
+    horizon = CHUNK * (WARMUP + ticks) + 1
+    trace = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
+                           horizon=horizon, noise_std=0.002)
+    ys, us = np.asarray(trace.ys_noisy), np.asarray(trace.us)
+
+    per_shard = -(-n_twins // shards)
+    scfg = TwinServerConfig(
+        merinda=MerindaConfig(n=system.spec.n, m=system.spec.m, order=3,
+                              dt=system.spec.dt, hidden=16, head_hidden=16,
+                              n_active=24),
+        max_twins=per_shard, refit_slots=8,
+        capacity=64, window=16, stride=8, windows_per_twin=4,
+        steps_per_tick=1, deploy_after=8, min_residency=4, max_residency=16,
+        guard=GuardConfig(window=24),
+        guard_budget=min(guard_budget, per_shard),
+        async_ingest=True, seed=seed)
+    srv = ShardedTwinServer(ShardedTwinConfig.uniform(
+        scfg, shards, rebalance_every=4))
+    try:
+        # warm start: every twin serves the offline-recovered model from tick
+        # 1 (broadcast deploy), so the guard is active across the whole store
+        theta0 = system.true_theta(srv.shards[0].fleet.model.lib)
+        srv.deploy_many(list(range(n_twins)), theta0)
+
+        for t in range(WARMUP + ticks):
+            lo = t * CHUNK
+            for i in range(n_twins):
+                srv.ingest(i, ys[i, lo:lo + CHUNK], us[i, lo:lo + CHUNK])
+            if t < WARMUP:
+                # bootstrap is paced faster than any real sensor stream:
+                # barrier the async flush so readiness, admissions, and every
+                # jit compile land before the stats reset; measured ticks run
+                # free (ingest prep overlapped on the pump thread)
+                srv.drain()
+            srv.tick()
+            if t == WARMUP - 1:
+                srv.reset_latency_stats()
+        srv.drain()
+        s = srv.latency_summary()
+        st = srv.stage_summary()
+        deployed = sum(r.deployed for shard in srv.shards
+                       for r in shard.twins.values())
+        return {
+            "twins": n_twins, "shards": shards,
+            "slots": sum(x.cfg.refit_slots for x in srv.shards),
+            "guard_budget": scfg.guard_budget, "ticks": s["ticks"],
+            "p50_ms": round(s["p50_ms"], 2), "p99_ms": round(s["p99_ms"], 2),
+            "max_ms": round(s["max_ms"], 2),
+            "deadline_s": s["deadline_s"], "violations": s["violations"],
+            "twin_refreshes_per_s": round(s["twin_refreshes_per_s"], 1),
+            "flush_ms": round(st["flush_ms"], 2),
+            "guard_ms": round(st["guard_ms"], 2),
+            "schedule_ms": round(st["schedule_ms"], 2),
+            "refit_ms": round(st["refit_ms"], 2),
+            "deployed": deployed,
+        }
+    finally:
+        srv.close()
+
+
+def _check_guard_flat(rows: list[dict]) -> None:
+    """The O(budget) contract: guard_ms within 2x from 1k -> 10k twins at
+    fixed shard count and budget."""
+    by_shards: dict[int, list[dict]] = {}
+    for r in rows:
+        by_shards.setdefault(r["shards"], []).append(r)
+    for shards, group in sorted(by_shards.items()):
+        group = [r for r in group if r["twins"] >= 1000]
+        if len(group) < 2:
+            continue
+        lo = min(group, key=lambda r: r["twins"])
+        hi = max(group, key=lambda r: r["twins"])
+        ratio = hi["guard_ms"] / max(lo["guard_ms"], 1e-9)
+        flat = "FLAT (O(budget) holds)" if ratio < 2.0 else "NOT FLAT"
+        print(f"[online_scale] guard cost {lo['twins']} -> {hi['twins']} "
+              f"twins @ {shards} shards: {lo['guard_ms']:.2f} -> "
+              f"{hi['guard_ms']:.2f} ms/tick ({ratio:.2f}x) — {flat}")
+
+
+def run(quick: bool = True, smoke: bool = False) -> None:
+    if smoke:
+        sweeps = [(64, 1, 6), (128, 2, 6)]
+    elif quick:
+        sweeps = [(64, 1, 12), (1000, 1, 12), (1000, 2, 12), (1000, 4, 12),
+                  (10000, 4, 12)]
+    else:
+        sweeps = [(64, 1, 24), (1000, 1, 24), (1000, 2, 24), (1000, 4, 24),
+                  (10000, 4, 24), (10000, 2, 24)]
+    rows = [_serve_scale(n, s, t) for n, s, t in sweeps]
+    print_rows("online serving at scale: sharded fleets, async ingest, "
+               "budgeted guard", rows)
+    _check_guard_flat(rows)
+    path = write_csv("online_scale.csv", rows)
+    print(f"[online_scale] wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -64,9 +64,12 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
     }
 
 
-def run(quick: bool = True) -> None:
-    sweeps = ([(64, 8, 30)] if quick
-              else [(64, 8, 60), (128, 8, 60), (256, 16, 60)])
+def run(quick: bool = True, smoke: bool = False) -> None:
+    if smoke:
+        sweeps = [(16, 4, 8)]          # CI smoke: exercise the loop, not perf
+    else:
+        sweeps = ([(64, 8, 30)] if quick
+                  else [(64, 8, 60), (128, 8, 60), (256, 16, 60)])
     rows = [_serve(n, s, t) for n, s, t in sweeps]
     print_rows("online serving: sustained refresh latency (1 s deadline)",
                rows)

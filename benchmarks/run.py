@@ -16,9 +16,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size sweeps (slow on 1 CPU core)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs (CI smoke lane; overrides --full)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "roofline",
-                             "online"])
+                             "online", "online_scale"])
     args = ap.parse_args()
     quick = not args.full
 
@@ -33,7 +35,10 @@ def main() -> None:
         table1_accuracy.run(quick=quick)
     if args.only in (None, "online"):
         from benchmarks import online_serving
-        online_serving.run(quick=quick)
+        online_serving.run(quick=quick, smoke=args.smoke)
+    if args.only in (None, "online_scale"):
+        from benchmarks import online_scale
+        online_scale.run(quick=quick, smoke=args.smoke)
     if args.only in (None, "roofline"):
         d = Path("artifacts/dryrun")
         if d.exists() and any(d.glob("*.json")):

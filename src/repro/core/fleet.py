@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.merinda import Merinda, MerindaConfig
+from repro.distributed.sharding import shard
 from repro.train.optimizer import adamw, apply_updates, clip_by_global_norm
 
 __all__ = ["FleetConfig", "FleetMerinda"]
@@ -93,6 +94,10 @@ class FleetMerinda:
         step was skipped as non-finite) so the serving layer can report
         losses for assigned slots without an extra forward pass.
         """
+        # logical twin_* shardings (distributed/sharding.py): the fleet axis
+        # is data-parallel over ('pod','data'); no-op outside axis_rules
+        y_win = shard(y_win, "twin_windows")
+        u_win = shard(u_win, "twin_windows")
         sparsify = state["steps"] > self.cfg.sparsify_after      # [F] bool
         loss, ok, grads = jax.vmap(self._twin_grad)(
             state["params"], y_win, u_win, sparsify)
@@ -100,7 +105,7 @@ class FleetMerinda:
         params = apply_updates(state["params"], updates)
         return ({"params": params, "opt": opt, "step": state["step"] + 1,
                  "steps": state["steps"] + 1},
-                loss, ok)
+                shard(loss, "twin_fleet"), ok)
 
     def train_step(self, state, y_win, u_win):
         """One fused step for every twin; returns the mean loss over twins

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["WindowDataset", "make_windows", "PrefetchIterator",
-           "ring_latest", "make_ring_windows"]
+           "BackgroundPump", "ring_latest", "make_ring_windows"]
 
 
 def make_windows(ys: jnp.ndarray, us: jnp.ndarray, window: int,
@@ -123,6 +123,84 @@ class WindowDataset:
                    normalize: bool = False):
         y_win, u_win = make_windows(ys, us, window, stride)
         return WindowDataset(y_win=y_win, u_win=u_win, dt=dt)
+
+
+class BackgroundPump:
+    """Event-driven background producer feeding a bounded handoff queue.
+
+    The PrefetchIterator pattern generalized from iterators to swap-based
+    producers: a consumer `kick()`s the pump whenever new source material
+    exists; the worker thread calls `produce()` (which should atomically take
+    the source's current contents — a double-buffer swap) and parks the result
+    in a depth-bounded queue.  `queue.put` on a full queue is the
+    backpressure: with depth=2 the worker prepares one batch while the
+    consumer applies another, and coalesces further kicks until a slot frees.
+
+    Used by twin/server.py to move the host-side telemetry staging flush off
+    the serving tick: `produce` swaps the staging buffer and does the numpy
+    merge/pad work; the tick thread `drain()`s prepared batches and issues
+    the (single-threaded) device scatters.
+
+    `produce` returning None (nothing staged) enqueues nothing.  `idle()` is
+    True once every kick issued so far has been fully processed — the drain
+    barrier used to guarantee no sample is left in flight.
+    """
+
+    def __init__(self, produce, depth: int = 2):
+        self._produce = produce
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._kicks = 0          # kicks issued
+        self._served = 0         # kicks whose produce() has fully completed
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def kick(self) -> None:
+        with self._lock:
+            self._kicks += 1
+        self._event.set()
+
+    def _run(self) -> None:
+        while True:
+            self._event.wait()
+            if self._stop:
+                return
+            # clear BEFORE reading the kick counter: a kick landing after the
+            # clear re-sets the event (extra wakeup, harmless); the reverse
+            # order would clear a fresh kick's wakeup and strand idle()
+            self._event.clear()
+            with self._lock:
+                target = self._kicks
+            item = self._produce()
+            if item is not None:
+                self._q.put(item)     # blocks when full: backpressure
+            with self._lock:
+                self._served = target
+            if self._stop:
+                return
+
+    def drain(self) -> list:
+        """Non-blocking: every batch the worker has parked so far."""
+        out = []
+        while True:
+            try:
+                out.append(self._q.get_nowait())
+            except queue.Empty:
+                return out
+
+    def idle(self) -> bool:
+        """True when no kick is pending or mid-produce (queued batches may
+        still await drain())."""
+        with self._lock:
+            return self._served >= self._kicks
+
+    def close(self) -> None:
+        self._stop = True
+        self._event.set()
+        self.drain()              # unblock a worker parked on a full queue
+        self._thread.join(timeout=5.0)
 
 
 class PrefetchIterator:

@@ -70,6 +70,18 @@ DEFAULT_ACT_RULES: dict[str, P] = {
     "act_gnec": P(("pod", "data"), None, "model", None),
     # recurrent state [B, H, K, V(head)] (rwkv6 / mamba2): heads over model.
     "state_bhkv": P(("pod", "data"), "model", None, None),
+    # ---- online twin serving (twin/*): every per-twin / per-slot axis is
+    # data-parallel over ('pod','data'), mirroring the FleetMerinda fleet
+    # axis, so one sharded TwinServer tick advances every shard's slots. ----
+    # telemetry rings [S, cap, n|m] and their write heads [S].
+    "twin_ring": P(("pod", "data"), None, None),
+    "twin_count": P(("pod", "data")),
+    # serving theta store [S, n, L].
+    "twin_theta": P(("pod", "data"), None, None),
+    # refit window batches [F, S_B, k(+1), n|m] (fleet axis leading).
+    "twin_windows": P(("pod", "data"), None, None, None),
+    # per-slot scalars [F]: step counters, losses.
+    "twin_fleet": P(("pod", "data")),
 }
 
 # --------------------------------------------------------------------------- #

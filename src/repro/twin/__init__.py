@@ -20,6 +20,13 @@ scheduler.py  `RefitScheduler` — slot-based refit scheduling mirroring
               FleetMerinda slots, twins admitted / preempted / released by a
               priority score of staleness + divergence, so thousands of
               tracked objects share `refit_slots` concurrent recoveries.
+              `SlotFederation` divides a global active-slot budget across
+              per-shard schedulers by aggregate pressure (sharded serving).
+
+sharded.py    `ShardedTwinServer` — N shards, each its own ring + slot pool
+              + theta store + scheduler, under one federation: the 10k+
+              tracked-object architecture (async ingest per shard, budgeted
+              guard rotation, slot grants following divergence pressure).
 
 server.py     `TwinServer` — ties the loop together.  `ingest(twin_id, y, u)`
               stages telemetry; each `tick()` flushes to the rings, scores
@@ -51,19 +58,29 @@ Quick start
             handle(ev)
     ys = server.predict(twin_id, horizon=50)
 
-End-to-end scenario: examples/online_twinning.py (64 F-8 twins, mid-stream
-dynamics switch -> guard fires, scheduler re-recovers).  Sustained
-latency/throughput table: benchmarks/online_serving.py (`--only online`).
+End-to-end scenarios: examples/online_twinning.py (64 F-8 twins, mid-stream
+dynamics switch -> guard fires, scheduler re-recovers) and
+examples/sharded_fleet.py (1k+ heterogeneous twins across federated shards).
+Sustained latency/throughput tables: benchmarks/online_serving.py
+(`--only online`) and benchmarks/online_scale.py (`--only online_scale`,
+64 -> 10k twins).
 """
-from repro.twin.monitor import DivergenceGuard, GuardConfig, GuardEvent
-from repro.twin.scheduler import (RefitScheduler, SchedulerConfig,
-                                  SchedulePlan, TwinRecord)
+from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
+                                GuardRotation)
+from repro.twin.scheduler import (FederationConfig, RefitScheduler,
+                                  SchedulerConfig, SchedulePlan,
+                                  SlotFederation, TwinRecord)
 from repro.twin.server import TickReport, TwinServer, TwinServerConfig
-from repro.twin.stream import RingConfig, TelemetryRing
+from repro.twin.sharded import (ShardedTickReport, ShardedTwinConfig,
+                                ShardedTwinServer)
+from repro.twin.stream import (RingConfig, StagingBuffer, TelemetryRing,
+                               prepare_flush)
 
 __all__ = [
-    "DivergenceGuard", "GuardConfig", "GuardEvent",
-    "RefitScheduler", "SchedulerConfig", "SchedulePlan", "TwinRecord",
+    "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardRotation",
+    "FederationConfig", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
+    "SlotFederation", "TwinRecord",
     "TickReport", "TwinServer", "TwinServerConfig",
-    "RingConfig", "TelemetryRing",
+    "ShardedTickReport", "ShardedTwinConfig", "ShardedTwinServer",
+    "RingConfig", "StagingBuffer", "TelemetryRing", "prepare_flush",
 ]

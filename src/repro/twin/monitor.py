@@ -22,6 +22,13 @@ Host-side hysteresis (`judge`) turns scores into events:
     prediction — the collision-avoidance abort signal)
 
 Scores are EMA-smoothed so a single noisy window does not flap the scheduler.
+
+At 10k+ tracked objects, rolling EVERY deployed theta per tick makes the
+guard the serving bottleneck — `GuardRotation` bounds it: each tick scores a
+fixed-size subset (budgeted round-robin over the store, plus a carry-over
+quota that re-scores the currently most-diverged twins every tick), so guard
+cost is O(budget) instead of O(twins) while every twin is still guaranteed a
+score within ceil(twins / budget) ticks.
 """
 from __future__ import annotations
 
@@ -30,10 +37,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.distributed.sharding import shard
 from repro.kernels.rk4.ops import rk4_poly_solve
 
-__all__ = ["GuardConfig", "GuardEvent", "DivergenceGuard"]
+__all__ = ["GuardConfig", "GuardEvent", "DivergenceGuard", "GuardRotation"]
 
 _BLOWUP_SCORE = 1e6     # score assigned to non-finite (unstable) rollouts
 
@@ -71,8 +80,9 @@ class DivergenceGuard:
         theta: [B, n, L]; ys: [B, k+1, n] newest telemetry; us: [B, k, m].
         Returns [B] float32 — finite even when the rollout diverges.
         """
-        y_est = rk4_poly_solve(theta, ys[:, 0, :], us, dt=self.dt,
-                               library=self.lib, use_pallas=self.use_pallas,
+        y_est = rk4_poly_solve(shard(theta, "twin_theta"), ys[:, 0, :], us,
+                               dt=self.dt, library=self.lib,
+                               use_pallas=self.use_pallas,
                                interpret=self.interpret)
         num = jnp.mean(jnp.square(y_est - ys), axis=(1, 2))
         den = jnp.mean(jnp.square(ys - jnp.mean(ys, axis=1, keepdims=True)),
@@ -93,3 +103,65 @@ class DivergenceGuard:
         if score > self.cfg.refit_threshold:
             return GuardEvent(twin_id, "REFIT", float(score), tick)
         return None
+
+
+class GuardRotation:
+    """Budgeted round-robin guard scheduling with divergence carry-over.
+
+    Each tick `select()` picks which ring rows the guard scores:
+
+      * `budget` rows advance a cyclic cursor over the eligible set, so every
+        eligible twin is re-scored within ceil(eligible / budget) ticks — the
+        freshness floor (host-tested in tests/test_twin_sharded.py);
+      * up to `carry` EXTRA rows re-score the currently most-diverged twins
+        (EMA score above the refit threshold) every tick, so a flagged twin's
+        escalation to ALERT is never delayed by its place in the rotation.
+
+    The carry quota rides ON TOP of the round-robin budget (fused guard call
+    shape = budget + carry, scratch-padded), so priority twins never starve
+    the rotation and the freshness bound survives any divergence pattern.
+
+    Selection is pure numpy over a pre-sorted eligible-row array and a
+    by-row divergence array (both maintained incrementally by the server):
+    at 10k twins a per-tick python rescan of the store would reintroduce the
+    O(twins) host cost this class exists to remove.
+    """
+
+    def __init__(self, budget: int, carry: int = 0):
+        if budget < 1:
+            raise ValueError("guard rotation budget must be >= 1")
+        self.budget = budget
+        self.carry = max(0, carry)
+        self._cursor = 0       # next ring row served by the rotation (cyclic)
+
+    @property
+    def size(self) -> int:
+        """Fixed fused-call width (rows beyond the pick are scratch-padded)."""
+        return self.budget + self.carry
+
+    def select(self, rows: np.ndarray, div_by_row: np.ndarray,
+               threshold: float) -> np.ndarray:
+        """Pick this tick's ring rows.
+
+        rows: SORTED int array of eligible ring rows; div_by_row: full
+        by-row EMA score array (indexed by ring row, not position).
+        Returns at most `budget + carry` distinct rows.
+        """
+        rows = np.asarray(rows)
+        if rows.size == 0:
+            return rows
+        i = int(np.searchsorted(rows, self._cursor))
+        take = min(self.budget, rows.size)
+        pick = rows[(i + np.arange(take)) % rows.size]
+        self._cursor = int(pick[-1]) + 1
+        if self.carry:
+            flagged = rows[div_by_row[rows] > threshold]
+            flagged = flagged[~np.isin(flagged, pick)]
+            if flagged.size > self.carry:
+                part = np.argpartition(-div_by_row[flagged],
+                                       self.carry - 1)[:self.carry]
+                flagged = flagged[part]
+            # deterministic order: most diverged first, row id breaks ties
+            flagged = flagged[np.lexsort((flagged, -div_by_row[flagged]))]
+            pick = np.concatenate([pick, flagged])
+        return pick

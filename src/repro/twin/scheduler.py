@@ -28,12 +28,21 @@ Slot turnover:
     gone quiet (divergence below `release_divergence`) RELEASES its slot
     voluntarily — the mechanism that lets a big fleet rotate through a small
     slot pool.
+
+Federation (sharded serving, twin/sharded.py): each shard runs its own
+scheduler over its own twins; `SlotFederation` divides a GLOBAL active-slot
+budget across shards in proportion to their aggregate staleness+divergence
+`pressure`, and each shard's `plan(..., max_active=k)` honors its grant —
+shedding surplus residents (lowest priority first) when the grant shrinks.
+Physical slot pools stay fixed-shape (no recompiles); only the number of
+slots a shard may FILL moves.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "RefitScheduler"]
+__all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "RefitScheduler",
+           "FederationConfig", "SlotFederation"]
 
 
 @dataclass
@@ -87,15 +96,28 @@ class RefitScheduler:
     def ready(self, rec: TwinRecord) -> bool:
         return rec.samples >= self.cfg.min_samples
 
+    def pressure(self, twins: dict[int, TwinRecord]) -> float:
+        """Aggregate refit demand: summed priority over READY twins (waiting
+        AND resident — a shard actively refitting diverged twins is still
+        under pressure).  The federation's rebalancing signal."""
+        return sum(self.priority(r) for r in twins.values() if self.ready(r))
+
     # ------------------------------------------------------------------ #
-    def plan(self, twins: dict[int, TwinRecord]) -> SchedulePlan:
+    def plan(self, twins: dict[int, TwinRecord],
+             max_active: int | None = None) -> SchedulePlan:
         """Decide this tick's slot turnover.  Pure: mutates nothing; the
         server applies the plan (device-side slot resets + record updates).
+
+        `max_active` caps how many physical slots may be FILLED (the
+        federation grant); None means the whole pool.  When the grant drops
+        below current occupancy, the lowest-priority residents are shed.
 
         Iteration is in twin_id order so equal-priority decisions are
         deterministic across runs.
         """
         cfg = self.cfg
+        cap = (cfg.slots if max_active is None
+               else max(0, min(cfg.slots, max_active)))
         plan = SchedulePlan()
         residents = sorted((r for r in twins.values()
                             if r.refit_slot is not None),
@@ -104,6 +126,16 @@ class RefitScheduler:
                           if r.refit_slot is None and self.ready(r)),
                          key=lambda r: (-self.priority(r), r.twin_id))
 
+        # federation revoke: the grant shrank below occupancy — shed the
+        # lowest-priority residents until the shard fits its grant
+        if len(residents) > cap:
+            shed = sorted(residents,
+                          key=lambda r: (self.priority(r), r.twin_id))
+            shed = shed[:len(residents) - cap]
+            shed_ids = {r.twin_id for r in shed}
+            plan.release.extend(sorted(shed_ids))
+            residents = [r for r in residents if r.twin_id not in shed_ids]
+
         # voluntary release: converged, healthy residents hand back slots.
         # A resident stuck far past max_residency without converging is
         # released too (its divergence priority would otherwise let it starve
@@ -111,27 +143,32 @@ class RefitScheduler:
         free: list[int] = sorted(set(range(cfg.slots))
                                  - {r.refit_slot for r in residents})
         kept: list[TwinRecord] = []
-        # release only for waiting twins the already-free slots cannot
-        # absorb — releasing more would idle slots and throw away converged
-        # training state
-        releasable = len(waiting) - len(free)
+        # release only for waiting twins the free slots USABLE under the
+        # grant cannot absorb — releasing more would idle slots and throw
+        # away converged training state
+        usable_free = min(len(free), cap - len(residents))
+        releasable = len(waiting) - usable_free
+        voluntary = 0
         for r in residents:
             healthy = r.deployed and r.divergence < cfg.release_divergence
             stuck = r.residency >= 2 * cfg.max_residency
-            if (len(plan.release) < releasable
+            if (voluntary < releasable
                     and ((r.residency >= cfg.max_residency and healthy)
                          or stuck)):
                 plan.release.append(r.twin_id)
+                voluntary += 1
                 free.append(r.refit_slot)
             else:
                 kept.append(r)
 
-        # fill free slots with the best waiting twins
+        # fill free slots with the best waiting twins, up to the grant
         free.sort()
+        budget = cap - len(kept)
         for slot in free:
-            if not waiting:
+            if not waiting or budget <= 0:
                 break
             plan.admit.append((slot, waiting.pop(0).twin_id))
+            budget -= 1
 
         # preemption: strongest challengers vs weakest eligible residents
         evictable = sorted((r for r in kept
@@ -148,3 +185,66 @@ class RefitScheduler:
             else:
                 break   # residents below this one are even harder to beat
         return plan
+
+
+# --------------------------------------------------------------------------- #
+# Federation: divide a global active-slot budget across per-shard schedulers
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FederationConfig:
+    total_slots: int        # global active-refit budget across all shards
+    min_slots: int = 1      # per-shard grant floor (keeps every shard live)
+    smooth: float = 0.5     # EMA weight of the newest pressure reading
+
+
+class SlotFederation:
+    """Rebalance refit-slot grants across shards by aggregate pressure.
+
+    Each shard reports `RefitScheduler.pressure` (summed staleness+divergence
+    priority over its ready twins); grants are allocated proportionally —
+    floor first, then one slot at a time to the shard with the lowest
+    grant-to-pressure ratio, clamped at each shard's physical pool.  Pressure
+    is EMA-smoothed so a single noisy tick does not thrash slots between
+    shards (slot moves cost a `reset_slot` warmup on the receiving side).
+    """
+
+    def __init__(self, cfg: FederationConfig, shard_slots: list[int]):
+        if cfg.total_slots > sum(shard_slots):
+            raise ValueError("federation budget exceeds the physical pools")
+        self.cfg = cfg
+        self.shard_slots = list(shard_slots)
+        self._ema = [0.0] * len(shard_slots)
+
+    @property
+    def pressures(self) -> list[float]:
+        return list(self._ema)
+
+    def rebalance(self, pressures: list[float]) -> list[int]:
+        """pressures[i] = shard i's current aggregate demand; returns the
+        per-shard active-slot grants (sums to total_slots when the physical
+        pools allow it)."""
+        cfg = self.cfg
+        n = len(self.shard_slots)
+        a = cfg.smooth
+        self._ema = [a * p + (1 - a) * e
+                     for p, e in zip(pressures, self._ema)]
+        grants = [min(cfg.min_slots, cap) for cap in self.shard_slots]
+        budget = cfg.total_slots - sum(grants)
+        while budget < 0:      # degenerate: floors exceed the global budget
+            i = max(range(n), key=lambda j: grants[j])
+            grants[i] -= 1
+            budget += 1
+        weights = [max(e, 0.0) for e in self._ema]
+        if sum(weights) <= 0:
+            weights = [1.0] * n        # no demand anywhere: split evenly
+        # proportional-fair greedy: next slot to the shard whose grant is
+        # smallest relative to its demand (deterministic, O(total_slots))
+        while budget > 0:
+            cand = [i for i in range(n) if grants[i] < self.shard_slots[i]]
+            if not cand:
+                break
+            i = min(cand, key=lambda j: (grants[j] / (weights[j] + 1e-9),
+                                         -weights[j], j))
+            grants[i] += 1
+            budget -= 1
+        return grants

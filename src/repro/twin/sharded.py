@@ -1,0 +1,218 @@
+"""ShardedTwinServer: the 10k-tracked-object serving architecture.
+
+One `TwinServer` saturates at a few hundred twins: its guard scan, staging
+flush, and single refit-slot pool all serialize on one tick loop.  This
+module partitions the tracked fleet across N SHARDS — each shard owns its own
+`TelemetryRing`, `FleetMerinda` refit-slot pool, theta store, and
+`RefitScheduler` — with two cross-shard mechanisms on top:
+
+  * **Slot federation** (`SlotFederation`, twin/scheduler.py): a GLOBAL
+    active-refit budget is divided across shards in proportion to their
+    aggregate staleness+divergence pressure, re-evaluated every
+    `rebalance_every` ticks.  A shard whose twins diverge (dynamics changed,
+    models stale) is granted slots that quiet shards give back — refit
+    compute follows the emergency.  Physical pools never change shape, so
+    nothing recompiles; only each scheduler's fill cap moves.
+
+  * **Shared compiled modules**: shards with identical configs share the
+    stateless ring/fleet/guard module objects (`share_modules_from`), so the
+    fused serving kernels compile once per topology instead of once per
+    shard.
+
+Shards may also be HETEROGENEOUS (different MerindaConfig per shard) — the
+mixed-fleet deployment where F-8 airframes, Van der Pol oscillators, and
+Lotka-Volterra populations are tracked by one server
+(examples/sharded_fleet.py); federation grants still flow between them.
+
+Placement is sticky: a twin's first `register`/`ingest` pins it to a shard
+(`twin_id % shards` by default, or an explicit `shard=` for family-routed
+fleets).  Combined with per-shard `async_ingest` (background staging flush)
+and `guard_budget` (O(budget) rotating guard), one process tracks 10k+
+objects — `benchmarks/online_scale.py` is the scaling evidence.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.twin.monitor import GuardEvent
+from repro.twin.scheduler import FederationConfig, SlotFederation
+from repro.twin.server import TickReport, TwinServer, TwinServerConfig
+
+__all__ = ["ShardedTwinConfig", "ShardedTickReport", "ShardedTwinServer"]
+
+
+@dataclass(frozen=True)
+class ShardedTwinConfig:
+    servers: tuple[TwinServerConfig, ...]   # one per shard (may differ)
+    total_slots: int | None = None    # global active-refit budget
+                                      # (None: sum of physical pools —
+                                      # federation never constrains)
+    min_shard_slots: int = 1          # per-shard grant floor
+    rebalance_every: int = 4          # federation period (ticks)
+    pressure_smooth: float = 0.5      # EMA on the pressure signal
+
+    @staticmethod
+    def uniform(server: TwinServerConfig, shards: int,
+                **kw) -> "ShardedTwinConfig":
+        """N identical shards (they will share compiled modules)."""
+        return ShardedTwinConfig(servers=(server,) * shards, **kw)
+
+
+@dataclass
+class ShardedTickReport:
+    tick: int
+    latency_s: float
+    deadline_met: bool
+    reports: list[TickReport]             # per shard, in shard order
+    grants: list[int]                     # active-slot grant per shard
+    events: list[GuardEvent] = field(default_factory=list)
+    n_active: int = 0
+    n_twins: int = 0
+    n_guarded: int = 0
+
+
+class ShardedTwinServer:
+    def __init__(self, cfg: ShardedTwinConfig):
+        if not cfg.servers:
+            raise ValueError("need at least one shard")
+        self.cfg = cfg
+        self.shards: list[TwinServer] = []
+        first_with_cfg: dict[TwinServerConfig, TwinServer] = {}
+        for i, scfg in enumerate(cfg.servers):
+            srv = TwinServer(scfg,
+                             share_modules_from=first_with_cfg.get(scfg),
+                             seed=scfg.seed + i)
+            first_with_cfg.setdefault(scfg, srv)
+            self.shards.append(srv)
+
+        pools = [s.cfg.refit_slots for s in self.shards]
+        total = sum(pools) if cfg.total_slots is None else cfg.total_slots
+        self.federation = SlotFederation(
+            FederationConfig(total_slots=total,
+                             min_slots=cfg.min_shard_slots,
+                             smooth=cfg.pressure_smooth), pools)
+        self.grants = self.federation.rebalance([0.0] * len(pools))
+        for srv, g in zip(self.shards, self.grants):
+            srv.set_active_slots(g)
+
+        self._placement: dict[int, int] = {}      # twin_id -> shard index
+        self.tick_count = 0
+        self.latencies: list[float] = []
+        self.refresh_counts: list[int] = []
+        self.deadline_s = min(s.cfg.deadline_s for s in self.shards)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, twin_id: int) -> int:
+        """The twin's pinned shard (pins it modulo-N if unplaced)."""
+        s = self._placement.get(twin_id)
+        if s is None:
+            s = twin_id % self.n_shards
+            self._placement[twin_id] = s
+        return s
+
+    def register(self, twin_id: int, shard: int | None = None):
+        """Start tracking; `shard` pins placement explicitly (family routing
+        for heterogeneous fleets) — conflicting re-pins raise."""
+        if shard is not None:
+            prev = self._placement.setdefault(twin_id, shard)
+            if prev != shard:
+                raise ValueError(f"twin {twin_id} already placed on shard "
+                                 f"{prev}, cannot move to {shard}")
+        return self.shards[self.shard_of(twin_id)].register(twin_id)
+
+    # ------------------------------------------------------------------ #
+    def ingest(self, twin_id: int, y, u=None):
+        self.shards[self.shard_of(twin_id)].ingest(twin_id, y, u)
+
+    def deploy(self, twin_id: int, theta) -> None:
+        self.shards[self.shard_of(twin_id)].deploy(twin_id, theta)
+
+    def deploy_many(self, twin_ids, thetas) -> None:
+        """Warm-start across shards: one fused scatter per shard."""
+        thetas = np.asarray(thetas)
+        by_shard: dict[int, list[int]] = {}
+        for k, tid in enumerate(twin_ids):
+            by_shard.setdefault(self.shard_of(tid), []).append(k)
+        for s, ks in by_shard.items():
+            ids = [twin_ids[k] for k in ks]
+            self.shards[s].deploy_many(
+                ids, thetas if thetas.ndim == 2 else thetas[ks])
+
+    def predict(self, twin_id: int, horizon: int, us=None):
+        return self.shards[self.shard_of(twin_id)].predict(twin_id, horizon,
+                                                           us)
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> ShardedTickReport:
+        """One serving cycle: every shard ticks, then (periodically) the
+        federation re-divides the global slot budget by shard pressure."""
+        t0 = time.perf_counter()
+        self.tick_count += 1
+        reports = [srv.tick() for srv in self.shards]
+        if self.tick_count % self.cfg.rebalance_every == 0:
+            self.grants = self.federation.rebalance(
+                [srv.scheduler.pressure(srv.twin_snapshot())
+                 for srv in self.shards])
+            for srv, g in zip(self.shards, self.grants):
+                srv.set_active_slots(g)
+        latency = time.perf_counter() - t0
+        self.latencies.append(latency)
+        self.refresh_counts.append(sum(r.n_active for r in reports))
+        return ShardedTickReport(
+            tick=self.tick_count, latency_s=latency,
+            deadline_met=latency <= self.deadline_s,
+            reports=reports, grants=list(self.grants),
+            events=[e for r in reports for e in r.events],
+            n_active=sum(r.n_active for r in reports),
+            n_twins=sum(r.n_twins for r in reports),
+            n_guarded=sum(r.n_guarded for r in reports))
+
+    # ------------------------------------------------------------------ #
+    def drain(self) -> None:
+        """Barrier: every ingested sample reaches its shard's ring."""
+        for srv in self.shards:
+            srv.drain()
+
+    def close(self) -> None:
+        for srv in self.shards:
+            srv.close()
+
+    # ------------------------------------------------------------------ #
+    def reset_latency_stats(self) -> None:
+        self.latencies.clear()
+        self.refresh_counts.clear()
+        for srv in self.shards:
+            srv.reset_latency_stats()
+
+    def latency_summary(self) -> dict:
+        """p50/p99 of the WHOLE sharded tick + aggregate twin throughput."""
+        lat = np.asarray(self.latencies)
+        if lat.size == 0:
+            return {"ticks": 0}
+        total = float(lat.sum())
+        return {
+            "ticks": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(lat.max() * 1e3),
+            "deadline_s": self.deadline_s,
+            "violations": int((lat > self.deadline_s).sum()),
+            "twin_refreshes_per_s":
+                sum(self.refresh_counts) / max(total, 1e-9),
+        }
+
+    def stage_summary(self) -> dict:
+        """Aggregate per-tick stage cost across shards (ms): the guard
+        column is the scale benchmark's O(budget) evidence."""
+        out: dict[str, float] = {}
+        for srv in self.shards:
+            for k, v in srv.stage_summary().items():
+                out[k] = out.get(k, 0.0) + v
+        return out

@@ -24,15 +24,19 @@ equivalent chronological trace (tested in tests/test_twin_stream.py).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.pipeline import make_ring_windows, ring_latest
+from repro.distributed.sharding import shard
 
-__all__ = ["RingConfig", "TelemetryRing"]
+__all__ = ["RingConfig", "TelemetryRing", "StagingBuffer", "FlushBatch",
+           "prepare_flush"]
 
 
 @dataclass(frozen=True)
@@ -72,7 +76,9 @@ class TelemetryRing:
         """
         cfg = self.cfg
         C = ys.shape[1]
-        assert C <= cfg.capacity, "chunk may not lap the ring"
+        if C > cfg.capacity:     # trace-time shape check; survives python -O
+            raise ValueError(f"chunk of {C} samples would lap the "
+                             f"{cfg.capacity}-sample ring")
         offs = jnp.arange(C)[None, :]                        # [1, C]
         cols = (state["count"][slots][:, None] + offs) % cfg.capacity
         valid = offs < counts[:, None]                       # [B, C]
@@ -84,7 +90,11 @@ class TelemetryRing:
         u = state["u"].at[rows, cols].set(
             jnp.where(valid[..., None], us, old_u))
         count = state["count"].at[slots].add(counts)
-        return {"y": y, "u": u, "count": count}
+        # logical twin_* shardings (distributed/sharding.py): the ring's slot
+        # axis partitions over ('pod','data') exactly like the fleet axis —
+        # a no-op outside an axis_rules context (CPU tests, single device)
+        return {"y": shard(y, "twin_ring"), "u": shard(u, "twin_ring"),
+                "count": shard(count, "twin_count")}
 
     # ------------------------------------------------------------------ #
     @partial(jax.jit, static_argnames=("self", "length"))
@@ -124,3 +134,119 @@ class TelemetryRing:
         """Logically empty one ring (eviction of a tracked object)."""
         return {"y": state["y"], "u": state["u"],
                 "count": state["count"].at[slot].set(0)}
+
+
+# --------------------------------------------------------------------------- #
+# Host-side staging: thread-safe chunk accumulation + fused-flush preparation
+# --------------------------------------------------------------------------- #
+class StagingBuffer:
+    """Thread-safe host-side staging of telemetry chunks, keyed by ring row.
+
+    The seed server staged chunks in a bare dict and assumed single-threaded
+    callers; with async ingestion the producer (sensor threads calling
+    `TwinServer.ingest`) and the flusher (a `BackgroundPump` worker) race on
+    that dict.  This buffer makes the handoff explicit:
+
+      * `append()` — producers push chunks under the lock (cheap: list append),
+      * `swap()`   — the flusher atomically takes the filled buffer and
+        installs an empty one (the double-buffer handoff), so producers never
+        wait on the numpy merge/pad work that follows.
+
+    Chronological order per row is preserved across swaps: chunks appended
+    before a swap land in an earlier `FlushBatch`, and batches are applied in
+    FIFO order by the consumer.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._buf: dict[int, list] = {}
+        self.staged_samples = 0      # samples appended, monotonic
+        self.swapped_samples = 0     # samples handed off via swap(), monotonic
+
+    def append(self, row: int, y: np.ndarray, u: np.ndarray) -> None:
+        with self._lock:
+            self._buf.setdefault(row, []).append((y, u))
+            self.staged_samples += len(y)
+
+    def swap(self) -> dict[int, list]:
+        """Atomically take everything staged so far (may be empty)."""
+        with self._lock:
+            buf, self._buf = self._buf, {}
+            self.swapped_samples += sum(len(c[0]) for cs in buf.values()
+                                        for c in cs)
+            return buf
+
+    def empty(self) -> bool:
+        with self._lock:
+            return not self._buf
+
+
+@dataclass
+class FlushBatch:
+    """One prepared fused-ingest call: fixed-quanta padded device operands
+    plus the per-row raw sample counts (pre-truncation) for host accounting."""
+    slots: np.ndarray        # [B] int32 ring rows (scratch-padded)
+    ys: np.ndarray           # [B, C, n]
+    us: np.ndarray           # [B, C, m]
+    counts: np.ndarray       # [B] int32 valid prefix per row
+    received: dict[int, int] # ring row -> raw samples staged (incl. truncated)
+    dropped: int = 0         # backlog samples truncated (ring would have
+                             # overwritten them anyway — but loudly counted)
+
+
+def prepare_flush(staged: dict[int, list], *, capacity: int, pad: int,
+                  scratch: int, n: int, m: int) -> FlushBatch | None:
+    """Merge staged chunks into one fixed-quanta fused-ingest batch.
+
+    Pads BOTH axes to `pad` quanta (rows with scratch/zero-count entries,
+    columns per chunk-length quantum) so the fused ingest does not recompile
+    when the set of reporting twins varies tick to tick.  A BACKLOG (many
+    chunks whose total exceeds the ring) keeps only the newest
+    capacity-worth of samples — the ring would have overwritten the rest
+    anyway — and reports the loss in `dropped`; `received` still carries the
+    raw counts so twin sample accounting stays exact.
+
+    A SINGLE chunk longer than the ring is different: the fused scatter
+    would lap itself within one call and corrupt the ring silently.  That
+    raises RuntimeError — an explicit overflow assert instead of silent
+    mid-flush wraparound (`TwinServer.ingest` validates chunks up front;
+    this guards direct/async callers).
+    """
+    if not staged:
+        return None
+    merged = []
+    received: dict[int, int] = {}
+    dropped = 0
+    for row, chunks in sorted(staged.items()):
+        longest = max(len(c[0]) for c in chunks)
+        if longest > capacity:
+            raise RuntimeError(
+                f"staged chunk of {longest} samples would lap the "
+                f"{capacity}-sample ring mid-flush (row {row})")
+        y = np.concatenate([c[0] for c in chunks], 0)
+        u = np.concatenate([c[1] for c in chunks], 0)
+        received[row] = len(y)
+        if len(y) > capacity:
+            dropped += len(y) - capacity
+            y, u = y[-capacity:], u[-capacity:]
+        merged.append((row, y, u))
+    # row axis: pad quanta bucketed to powers of two — async flushes swap at
+    # arbitrary moments, so the reporting-row count varies freely; pow2
+    # bucketing caps the number of distinct fused-ingest shapes at
+    # log2(max_twins) instead of max_twins/pad (each shape is a retrace)
+    q = -(-len(merged) // pad)
+    B = int(pad * (1 << (q - 1).bit_length()))
+    # cap the padded length at ring capacity: every chunk is already
+    # truncated to <= cap, but rounding up could lap a non-multiple ring
+    C = min(int(-(-max(len(y) for _, y, _ in merged) // pad) * pad), capacity)
+    ys = np.zeros((B, C, n), np.float32)
+    us = np.zeros((B, C, m), np.float32)
+    slots = np.full((B,), scratch, np.int32)
+    counts = np.zeros((B,), np.int32)
+    for i, (row, y, u) in enumerate(merged):
+        ys[i, :len(y)] = y
+        us[i, :len(y)] = u
+        slots[i] = row
+        counts[i] = len(y)
+    return FlushBatch(slots=slots, ys=ys, us=us, counts=counts,
+                      received=received, dropped=dropped)

@@ -1,7 +1,8 @@
-import pytest
-
-
+# Markers are registered in pyproject.toml ([tool.pytest.ini_options]);
+# this hook stays so the suite also collects cleanly when pytest is invoked
+# with an explicit -c pointing elsewhere.
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
     config.addinivalue_line("markers",
                             "dryrun: multi-device compile-only test")
+    config.addinivalue_line("markers", "hypothesis: property-based test")

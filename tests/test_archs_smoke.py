@@ -17,7 +17,11 @@ import pytest
 from repro.configs import get_arch, list_archs
 from repro.models.zoo import build
 
-ARCHS = list_archs()
+# the two heaviest reduced configs (~20 s each on CPU) run outside the
+# -m "not slow" CI lane; the remaining archs keep the zoo covered there
+_HEAVY = {"arctic-480b", "gemma3-12b"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in list_archs()]
 B, T = 2, 16
 
 

@@ -24,7 +24,9 @@ def _greedy_reference(api, params, prompt, n_new):
     return toks
 
 
-@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-3b", "gemma3-12b"])
+@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-3b",
+                                  pytest.param("gemma3-12b",
+                                               marks=pytest.mark.slow)])
 def test_engine_matches_sequential(arch):
     api = build(get_arch(arch).smoke)
     params = api.init(jax.random.PRNGKey(0))
