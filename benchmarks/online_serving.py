@@ -28,7 +28,8 @@ WARMUP = 18        # ticks excluded from stats: jit compile, slot fill, and
                    # the first deploy/guard activations all land in warmup
 
 
-def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
+def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0,
+           use_pallas: bool = False) -> dict:
     system = F8Crusader()
     horizon = CHUNK * (WARMUP + ticks) + 1
     trace = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
@@ -38,7 +39,7 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
     cfg = TwinServerConfig(
         merinda=MerindaConfig(n=system.spec.n, m=system.spec.m, order=3,
                               dt=system.spec.dt, hidden=32, head_hidden=32,
-                              n_active=24),
+                              n_active=24, use_pallas=use_pallas),
         max_twins=n_twins, refit_slots=refit_slots,
         capacity=256, window=24, stride=8, windows_per_twin=8,
         steps_per_tick=2, deploy_after=8, min_residency=4, max_residency=16,
@@ -55,7 +56,9 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
     s = srv.latency_summary()
     deployed = sum(r.deployed for r in srv.twins.values())
     return {
-        "twins": n_twins, "refit_slots": refit_slots, "ticks": s["ticks"],
+        "twins": n_twins, "refit_slots": refit_slots,
+        "backend": "pallas" if use_pallas else "reference",
+        "ticks": s["ticks"],
         "p50_ms": round(s["p50_ms"], 2), "p99_ms": round(s["p99_ms"], 2),
         "max_ms": round(s["max_ms"], 2),
         "deadline_s": s["deadline_s"], "violations": s["violations"],
@@ -64,16 +67,22 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0) -> dict:
     }
 
 
-def run(quick: bool = True, smoke: bool = False) -> None:
+def run(quick: bool = True, smoke: bool = False,
+        use_pallas: bool = False) -> None:
+    """`use_pallas=True` serves the same sweep on the Pallas hot path
+    (compiled on TPU, interpreter mode elsewhere — `--pallas` in run.py);
+    tick-level output parity with the reference backend is CI-gated in
+    tests/test_hotpath_parity.py."""
     if smoke:
         sweeps = [(16, 4, 8)]          # CI smoke: exercise the loop, not perf
     else:
         sweeps = ([(64, 8, 30)] if quick
                   else [(64, 8, 60), (128, 8, 60), (256, 16, 60)])
-    rows = [_serve(n, s, t) for n, s, t in sweeps]
+    rows = [_serve(n, s, t, use_pallas=use_pallas) for n, s, t in sweeps]
     print_rows("online serving: sustained refresh latency (1 s deadline)",
                rows)
-    path = write_csv("online.csv", rows)
+    path = write_csv("online_pallas.csv" if use_pallas else "online.csv",
+                     rows)
     print(f"[online] wrote {path}")
 
 

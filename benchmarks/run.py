@@ -20,7 +20,11 @@ def main() -> None:
                     help="tiny configs (CI smoke lane; overrides --full)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "roofline",
-                             "online", "online_scale"])
+                             "online", "online_scale", "hotpath"])
+    ap.add_argument("--pallas", action="store_true",
+                    help="serve the online benchmark on the Pallas hot path "
+                         "(use_pallas=True; compiled on TPU, interpreter "
+                         "mode elsewhere) -> bench_out/online_pallas.csv")
     args = ap.parse_args()
     quick = not args.full
 
@@ -35,10 +39,14 @@ def main() -> None:
         table1_accuracy.run(quick=quick)
     if args.only in (None, "online"):
         from benchmarks import online_serving
-        online_serving.run(quick=quick, smoke=args.smoke)
+        online_serving.run(quick=quick, smoke=args.smoke,
+                           use_pallas=args.pallas)
     if args.only in (None, "online_scale"):
         from benchmarks import online_scale
         online_scale.run(quick=quick, smoke=args.smoke)
+    if args.only in (None, "hotpath"):
+        from benchmarks import hotpath
+        hotpath.run(quick=quick, smoke=args.smoke)
     if args.only in (None, "roofline"):
         d = Path("artifacts/dryrun")
         if d.exists() and any(d.glob("*.json")):

@@ -44,8 +44,13 @@ class MerindaConfig:
     l1: float = 1e-3            # sparsity penalty on dense coefficients
     theta_scale: float = 1.0    # output scale of the head (match coeff range)
     collocation_weight: float = 1.0   # "network loss" (derivative residual)
-    use_pallas: bool = False
-    interpret: bool = True
+    # Backend selection for the GRU/RK4 hot blocks.  These flow unchanged to
+    # the kernel wrappers (kernels/gru, kernels/rk4) and from there into every
+    # serving module built on this config (fleet train_step, divergence guard,
+    # TwinServer.predict) — docs/KERNELS.md traces the full path.
+    use_pallas: bool = False    # False: jnp reference; True: Pallas kernels
+    interpret: bool | None = None   # None = auto (compiled on TPU, Pallas
+                                    # interpreter elsewhere); bool overrides
     learn_shift: bool = True    # the paper's q input-shift outputs
 
     @property

@@ -1,39 +1,92 @@
-"""Jit'd public wrapper for the GRU scan: pads to hardware-aligned tiles and
-dispatches to the Pallas kernel (TPU) or the pure-jnp reference (CPU/dry-run).
+"""Jit'd public wrapper for the GRU scan: backend dispatch, batch padding,
+and the custom-VJP rule that makes the Pallas path trainable.
+
+The serving hot path calls this from inside ``jax.vmap(jax.value_and_grad)``
+(FleetMerinda.train_step: one fused step over every refit slot, per-twin
+weights).  Two things make that work with ``use_pallas=True``:
+
+  * **custom_vjp** — `pallas_call` has no autodiff rule, so the Pallas
+    forward is paired with a backward that replays the pure-jnp reference
+    (kernels/gru/ref.py) under ``jax.vjp``.  Forward math and backward math
+    agree to kernel-parity tolerance (CI-gated in tests/test_hotpath_parity),
+    so gradients are exact w.r.t. the reference semantics at the cost of one
+    extra reference forward in the backward pass.
+  * **vmap batching** — `pallas_call` carries a batching rule that turns a
+    vmapped invocation into an extra grid axis, so fleet-shaped calls
+    (per-twin weights) run as one kernel launch over a (fleet, batch-tile)
+    grid.  Wrappers also accept extra leading batch axes directly when the
+    weights are shared (xs [..., B, T, Din] flattened into the batch axis).
+
+Batch padding is pow2-bucketed (kernels/backend.bucket_pow2): the padded
+batch is ``block_b * 2**k``, matching the pow2 flush quanta the ingestion
+path already produces, so a varying caller batch axis can only generate a
+log-bounded set of kernel shapes.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.backend import bucket_pow2, pad_batch, resolve_interpret
 from repro.kernels.gru.gru import gru_scan_pallas
 from repro.kernels.gru.ref import gru_scan_ref
 
 
-def _pad_to(x, axis: int, mult: int):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x, size
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), size
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gru_pallas(block_b, interpret, xs, h0, wx, wh, b):
+    """Pallas forward with reference backward; see `_gru_pallas_bwd`."""
+    B = xs.shape[0]
+    Bp = bucket_pow2(B, block_b)
+    hs, hT = gru_scan_pallas(pad_batch(xs, Bp), pad_batch(h0, Bp),
+                             wx, wh, b, block_b=block_b, interpret=interpret)
+    return hs[:B], hT[:B]
+
+
+def _gru_pallas_fwd(block_b, interpret, xs, h0, wx, wh, b):
+    return (_gru_pallas(block_b, interpret, xs, h0, wx, wh, b),
+            (xs, h0, wx, wh, b))
+
+
+def _gru_pallas_bwd(block_b, interpret, residuals, cts):
+    # Backward replays the jnp reference: pallas_call is not differentiable,
+    # and the reference IS the kernel's semantic contract (parity-tested).
+    _, vjp = jax.vjp(gru_scan_ref, *residuals)
+    return vjp(cts)
+
+
+_gru_pallas.defvjp(_gru_pallas_fwd, _gru_pallas_bwd)
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b"))
 def gru_scan(xs, h0, wx, wh, b, *, use_pallas: bool = False,
-             interpret: bool = True, block_b: int = 8):
+             interpret: bool | None = None, block_b: int = 8):
     """Fused GRU scan; see kernels/gru/ref.py for the math.
 
     xs: [B, T, Din], h0: [B, H], wx: [Din, 3H], wh: [H, 3H], b: [3H]
-    -> (hs [B, T, H], hT [B, H])
+    -> (hs [B, T, H], hT [B, H]).
+
+    Extra leading axes on xs/h0 (shared weights) are flattened into the
+    batch axis for the kernel and restored on return.  ``interpret=None``
+    resolves via kernels/backend (compiled on TPU, interpreter elsewhere).
     """
-    if not use_pallas:
-        return gru_scan_ref(xs, h0, wx, wh, b)
-    xs_p, B = _pad_to(xs, 0, block_b)
-    h0_p, _ = _pad_to(h0, 0, block_b)
-    hs, hT = gru_scan_pallas(xs_p, h0_p, wx, wh, b,
-                             block_b=block_b, interpret=interpret)
-    return hs[:B], hT[:B]
+    H = h0.shape[-1]
+    if wx.shape[-1] != 3 * H or wh.shape != (H, 3 * H) or b.shape[-1] != 3 * H:
+        raise ValueError(f"GRU weight shapes {wx.shape}/{wh.shape}/{b.shape} "
+                         f"inconsistent with hidden={H} (expect [*, 3H])")
+    if xs.shape[:-2] != h0.shape[:-1] or xs.shape[-1] != wx.shape[0]:
+        raise ValueError(f"xs {xs.shape} inconsistent with h0 {h0.shape} / "
+                         f"wx {wx.shape}")
+    lead = xs.shape[:-2]
+    if xs.ndim > 3:           # shared-weight batched entry: fold leading axes
+        T, d_in = xs.shape[-2:]
+        xs = xs.reshape((-1, T, d_in))
+        h0 = h0.reshape((-1, H))
+    if use_pallas:
+        hs, hT = _gru_pallas(block_b, resolve_interpret(interpret),
+                             xs, h0, wx, wh, b)
+    else:
+        hs, hT = gru_scan_ref(xs, h0, wx, wh, b)
+    if len(lead) > 1:
+        hs, hT = hs.reshape(lead + hs.shape[1:]), hT.reshape(lead + (H,))
+    return hs, hT

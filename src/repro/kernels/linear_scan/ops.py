@@ -9,6 +9,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.linear_scan.ref import linear_scan_chunked
 
 __all__ = ["linear_scan"]
@@ -17,10 +18,11 @@ __all__ = ["linear_scan"]
 @partial(jax.jit, static_argnames=("mode", "chunk", "use_pallas", "interpret"))
 def linear_scan(q, k, v, w, u=None, *, mode: str = "ssd", chunk: int = 64,
                 initial_state=None, use_pallas: bool = False,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """q, k, w: [B, H, T, K]; v: [B, H, T, V]; u: [H, K] or None.
 
     Returns (o [B, H, T, V] f32, final_state [B, H, K, V] f32).
+    ``interpret=None`` resolves via kernels/backend (compiled on TPU only).
     """
     if not use_pallas:
         return linear_scan_chunked(q, k, v, w, u, mode=mode, chunk=chunk,
@@ -28,4 +30,4 @@ def linear_scan(q, k, v, w, u=None, *, mode: str = "ssd", chunk: int = 64,
     from repro.kernels.linear_scan.linear_scan import linear_scan_pallas
     return linear_scan_pallas(q, k, v, w, u, mode=mode, chunk=chunk,
                               initial_state=initial_state,
-                              interpret=interpret)
+                              interpret=resolve_interpret(interpret))

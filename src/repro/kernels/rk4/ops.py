@@ -1,4 +1,15 @@
-"""Jit'd public wrapper for the fused RK4 polynomial-ODE integrator."""
+"""Jit'd public wrapper for the fused RK4 polynomial-ODE integrator.
+
+Same serving-hot-path contract as kernels/gru/ops.py: the Pallas forward is
+paired with a custom-VJP backward that replays the pure-jnp reference, so the
+fleet train step (``jax.vmap(jax.value_and_grad)`` over refit slots) and the
+divergence guard's fused rollouts both run the kernel with
+``use_pallas=True``.  Batch padding is pow2-bucketed (kernels/backend) so
+varying caller batch widths produce a log-bounded set of kernel shapes, and
+extra leading axes on theta/y0/us are folded into the batch axis (the
+fleet-shaped batched entry — RK4 coefficients are per-instance operands, so
+folding is exact).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,36 +18,83 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backend import bucket_pow2, pad_batch, resolve_interpret
 from repro.kernels.rk4.ref import rk4_poly_solve_ref
 from repro.kernels.rk4.rk4 import rk4_poly_solve_pallas, selection_matrices
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _rk4_pallas(dt, library, block_b, interpret, theta, y0, us):
+    """Pallas forward with reference backward; see `_rk4_pallas_bwd`."""
+    # Pallas BlockSpecs cannot carry zero-width dims: for autonomous systems
+    # (m == 0) pad a dummy zero input channel; its selection row stays cold.
+    if library.m == 0:
+        us = jnp.zeros(us.shape[:2] + (1,), us.dtype)
+    sel = jnp.asarray(selection_matrices(np.asarray(library.term_indices),
+                                         1 + library.n + max(library.m, 1)))
+    B = theta.shape[0]
+    Bp = bucket_pow2(B, block_b)
+    ys = rk4_poly_solve_pallas(pad_batch(theta, Bp), pad_batch(y0, Bp),
+                               pad_batch(us, Bp), dt, sel,
+                               block_b=block_b, interpret=interpret)
+    return ys[:B]
+
+
+def _rk4_pallas_fwd(dt, library, block_b, interpret, theta, y0, us):
+    return (_rk4_pallas(dt, library, block_b, interpret, theta, y0, us),
+            (theta, y0, us))
+
+
+def _rk4_pallas_bwd(dt, library, block_b, interpret, residuals, ct):
+    # Backward replays the jnp reference: pallas_call is not differentiable,
+    # and the reference IS the kernel's semantic contract (parity-tested).
+    theta, y0, us = residuals
+    ref = partial(rk4_poly_solve_ref, dt=dt,
+                  term_indices=np.asarray(library.term_indices))
+    _, vjp = jax.vjp(lambda th, y, u: ref(th, y, u), theta, y0, us)
+    return vjp(ct)
+
+
+_rk4_pallas.defvjp(_rk4_pallas_fwd, _rk4_pallas_bwd)
 
 
 @partial(jax.jit, static_argnames=("dt", "library", "use_pallas", "interpret",
                                    "block_b"))
 def rk4_poly_solve(theta, y0, us, *, dt: float, library,
-                   use_pallas: bool = False, interpret: bool = True,
+                   use_pallas: bool = False, interpret: bool | None = None,
                    block_b: int = 8):
     """Integrate dY = theta @ Phi(Y, u) for T steps.
 
     theta: [B, n, L], y0: [B, n], us: [B, T, m] -> ys [B, T+1, n].
     `library` is a repro.core.library.PolyLibrary (hashable static).
-    """
-    term_indices = np.asarray(library.term_indices)
-    if not use_pallas:
-        return rk4_poly_solve_ref(theta, y0, us, dt, term_indices)
 
-    # Pallas BlockSpecs cannot carry zero-width dims: for autonomous systems
-    # (m == 0) pad a dummy zero input channel; its selection row stays cold.
-    if library.m == 0:
-        us = jnp.zeros(us.shape[:2] + (1,), us.dtype)
-    sel = jnp.asarray(selection_matrices(term_indices,
-                                         1 + library.n + max(library.m, 1)))
-    B = theta.shape[0]
-    pad = (-B) % block_b
-    if pad:
-        theta = jnp.pad(theta, ((0, pad), (0, 0), (0, 0)))
-        y0 = jnp.pad(y0, ((0, pad), (0, 0)))
-        us = jnp.pad(us, ((0, pad), (0, 0), (0, 0)))
-    ys = rk4_poly_solve_pallas(theta, y0, us, dt, sel, block_b=block_b,
-                               interpret=interpret)
-    return ys[:B] if pad else ys
+    Extra leading axes ([..., B, n, L] etc.) are folded into the batch axis.
+    ``interpret=None`` resolves via kernels/backend (compiled on TPU,
+    interpreter elsewhere).
+    """
+    n, L = theta.shape[-2:]
+    if n != library.n or L != library.size:
+        raise ValueError(f"theta {theta.shape} inconsistent with library "
+                         f"(n={library.n}, L={library.size})")
+    if y0.shape[-1] != n or us.shape[-1] != library.m \
+            or theta.shape[:-2] != y0.shape[:-1] \
+            or theta.shape[:-2] != us.shape[:-2]:
+        raise ValueError(f"theta {theta.shape} / y0 {y0.shape} / us "
+                         f"{us.shape} batch or channel axes disagree "
+                         f"(library n={library.n}, m={library.m})")
+    term_indices = np.asarray(library.term_indices)
+    lead = theta.shape[:-2]
+    if theta.ndim > 3:        # fleet-shaped batched entry: fold leading axes
+        T = us.shape[-2]
+        # explicit flat batch size: reshape(-1) cannot infer it for
+        # autonomous systems (m == 0 makes us a zero-size array)
+        Bf = int(np.prod(lead))
+        theta = theta.reshape((Bf, n, L))
+        y0 = y0.reshape((Bf, n))
+        us = us.reshape((Bf, T, library.m))
+    if use_pallas:
+        ys = _rk4_pallas(dt, library, block_b, resolve_interpret(interpret),
+                         theta, y0, us)
+    else:
+        ys = rk4_poly_solve_ref(theta, y0, us, dt, term_indices)
+    return ys.reshape(lead + ys.shape[1:]) if len(lead) > 1 else ys

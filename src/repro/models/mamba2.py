@@ -73,7 +73,7 @@ def _split_proj(zxbcdt, d_inner, state, n_heads):
 def mamba2_apply(p, x, *, state: int = 64, head_dim: int = 64,
                  expand: int = 2, conv_width: int = 4, ssm_state=None,
                  conv_state=None, chunk: int = 64, use_pallas=False,
-                 interpret=True):
+                 interpret=None):
     """x: [B, T, d] -> (y, (new_conv_state, new_ssm_state))."""
     B, T, d = x.shape
     d_inner, n_heads, conv_dim = _dims(d, expand, head_dim, state)

@@ -84,7 +84,7 @@ def _token_shift(x, last):
 
 
 def rwkv6_time_mix(p, x, *, head_dim: int, last_x=None, state=None,
-                   chunk: int = 64, use_pallas=False, interpret=True):
+                   chunk: int = 64, use_pallas=False, interpret=None):
     """x: [B, T, d] -> (y, (new_last_x, new_state)).  state: [B,H,K,V]."""
     B, T, d = x.shape
     H, K = d // head_dim, head_dim

@@ -98,7 +98,7 @@ class LMConfig:
     kv_block: int = 1024
     scan_chunk: int = 64
     use_pallas: bool = False
-    interpret: bool = True
+    interpret: bool | None = None   # None = auto (kernels/backend)
 
     def with_(self, **kw) -> "LMConfig":
         return dataclasses.replace(self, **kw)

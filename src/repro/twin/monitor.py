@@ -64,8 +64,19 @@ class GuardEvent:
 
 
 class DivergenceGuard:
+    """Scores deployed thetas against reality; see module docstring.
+
+    Backend: `use_pallas`/`interpret` mirror `MerindaConfig` and flow into
+    the fused `rk4_poly_solve` rollout — `TwinServer` always passes its
+    MerindaConfig's values, so the guard rolls with the SAME backend the twin
+    was trained/recovered with.  ``interpret=None`` is the auto default
+    resolved in kernels/backend (compiled on TPU, interpreter elsewhere);
+    the old local ``interpret=True`` default silently pinned interpreter
+    mode regardless of the config.
+    """
+
     def __init__(self, library, dt: float, cfg: GuardConfig = GuardConfig(),
-                 *, use_pallas: bool = False, interpret: bool = True):
+                 *, use_pallas: bool = False, interpret: bool | None = None):
         self.lib = library
         self.dt = dt
         self.cfg = cfg
@@ -125,6 +136,17 @@ class GuardRotation:
     by-row divergence array (both maintained incrementally by the server):
     at 10k twins a per-tick python rescan of the store would reintroduce the
     O(twins) host cost this class exists to remove.
+
+    Complexity contract: per tick, device work is one fused rollout of
+    exactly `budget + carry` rows and host work is O(budget + carry + F)
+    where F is the count of currently-flagged twins (vectorized numpy) —
+    BOTH independent of the tracked-twin count.  The empirical gate: the
+    scale benchmark (`benchmarks/run.py --only online_scale`) requires mean
+    guard stage cost per tick to grow < 2x from 1k to 10k twins at a fixed
+    budget (last recorded: 21 -> 39 ms, 1.84x — bench_out/online_scale.csv),
+    and the freshness floor (every eligible twin re-scored within
+    ceil(eligible / budget) ticks) is host-tested in
+    tests/test_twin_sharded.py.
     """
 
     def __init__(self, budget: int, carry: int = 0):

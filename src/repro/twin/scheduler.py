@@ -112,6 +112,14 @@ class RefitScheduler:
         federation grant); None means the whole pool.  When the grant drops
         below current occupancy, the lowest-priority residents are shed.
 
+        Units: residency thresholds (`min_residency`, `max_residency`) are
+        serving TICKS, not seconds or train steps; `min_samples` is ring
+        telemetry samples.  Host cost is O(n log n) in the number of
+        tracked twins (two sorts per tick — the known 100k-twin scaling
+        limit, see ROADMAP).  Not thread-safe by itself; the server passes
+        a `twin_snapshot()` registry copy so concurrent `ingest`
+        registrations cannot race the iteration.
+
         Iteration is in twin_id order so equal-priority decisions are
         deterministic across runs.
         """

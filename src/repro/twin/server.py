@@ -289,6 +289,13 @@ class TwinServer:
         prepared batch, then flushes anything still staged inline.  Must be
         called from the serving (tick) thread — device state is
         single-threaded by design.
+
+        Guarantee: on return, all samples whose `ingest()` call returned
+        BEFORE `drain()` started are visible to the next fused gather.
+        Samples ingested concurrently with the drain may or may not be
+        included (they are never lost — at worst they wait for the next
+        flush).  Busy-waits in 0.1 ms sleeps while the pump finishes its
+        in-flight batch; does not block producers.
         """
         if self._pump is not None:
             while not self._pump.idle():
@@ -332,7 +339,13 @@ class TwinServer:
     def deploy_many(self, twin_ids, thetas) -> None:
         """Warm-start a whole fleet in one scatter: thetas [B, n, L] (or a
         single [n, L] broadcast to every twin).  The 10k-twin startup path —
-        per-twin `deploy` would issue 10k device ops."""
+        per-twin `deploy` would issue 10k device ops.
+
+        Registers unknown twin_ids, marks every target deployed, and admits
+        twins with >= guard.window+1 ring samples to the guard-eligible set.
+        Serving-thread only (mutates the device theta store); not safe to
+        call concurrently with `tick()`.
+        """
         recs = [self.register(t) for t in twin_ids]
         rows = np.asarray([r.ring_slot for r in recs], np.int32)
         thetas = jnp.asarray(thetas)
@@ -481,7 +494,26 @@ class TwinServer:
 
     # ------------------------------------------------------------------ #
     def tick(self) -> TickReport:
-        """One full serving cycle; see module docstring for the five stages."""
+        """One full serving cycle; see module docstring for the five stages.
+
+        Units: `TickReport.latency_s` and `cfg.deadline_s` are SECONDS
+        (`latency_summary`/`stage_summary` report milliseconds); the default
+        deadline of 1.0 s is the paper's mission budget — 5x under the 5 s
+        human-pilot reaction time.  `deadline_met` compares this tick's wall
+        latency against `cfg.deadline_s`.
+
+        Threading: must be called from the single serving thread (device
+        state — ring, fleet, theta store — is single-threaded by design).
+        `ingest()` MAY run concurrently on sensor threads; the staging
+        buffer's lock is the only synchronization point between them, and a
+        registry snapshot is taken before scheduling so concurrent
+        registrations cannot race dict iteration.
+
+        Fused-call costs per tick: flush is one scatter over the reporting
+        twins (pow2-bucketed shapes), guard is O(guard_budget + carry)
+        device work and O(budget) host work (`GuardRotation`), refit is
+        `steps_per_tick` fixed-shape train steps over `refit_slots` slots.
+        """
         t0 = time.perf_counter()
         self.tick_count += 1
         self._flush()

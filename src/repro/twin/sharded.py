@@ -75,6 +75,20 @@ class ShardedTickReport:
 
 
 class ShardedTwinServer:
+    """N `TwinServer` shards + slot federation; see module docstring.
+
+    API mirrors `TwinServer` (register/ingest/deploy/deploy_many/predict/
+    tick/drain/close + latency/stage summaries) with twin_ids routed to
+    their pinned shard.  Units: `ShardedTickReport.latency_s` is SECONDS
+    for the WHOLE sharded tick (all shards, serial); `deadline_s` is the
+    tightest per-shard deadline.  Threading matches `TwinServer`: `ingest`
+    is safe from many sensor threads (each shard's staging buffer
+    synchronizes its own producers), everything that touches device state —
+    `tick`, `drain`, `deploy*`, `predict` — belongs to one serving thread.
+    Guard cost per tick is O(sum of per-shard budgets), independent of the
+    tracked-twin count (the 1k->10k scale benchmark checks <= 2x drift).
+    """
+
     def __init__(self, cfg: ShardedTwinConfig):
         if not cfg.servers:
             raise ValueError("need at least one shard")

@@ -1,0 +1,263 @@
+"""Pallas serving hot-path parity lane (CI-gated, CPU interpret mode).
+
+The serving stack promises that ``use_pallas=True`` is a pure backend swap:
+every fused call in the online loop — the fleet refit train step (GRU scan +
+RK4 rollout under ``jax.vmap(jax.value_and_grad)``), the divergence guard's
+rollouts, and ``TwinServer.predict`` — produces the same numbers as the jnp
+reference path within float32 kernel tolerance.  These tests pin that
+contract on CPU by running the Pallas kernels in interpreter mode
+(``interpret=True`` — semantics identical to the compiled kernels, no TPU
+required), from single-kernel vmap+grad parity up to a full 64-twin
+`TwinServer` serving run compared tick by tick against the reference server.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetConfig, FleetMerinda
+from repro.core.library import make_library
+from repro.core.merinda import MerindaConfig
+from repro.kernels.backend import bucket_pow2, resolve_interpret
+from repro.kernels.gru.ops import gru_scan
+from repro.kernels.gru.ref import gru_scan_ref, init_gru_params
+from repro.kernels.rk4.ops import rk4_poly_solve
+from repro.kernels.rk4.ref import rk4_poly_solve_ref
+
+# interpret=True runs on any backend, so the lane needs no platform pin
+# (a module-level jax.config.update would leak onto every later test module)
+PALLAS = dict(use_pallas=True, interpret=True)
+
+
+# --------------------------------------------------------------------------- #
+# backend policy helpers
+# --------------------------------------------------------------------------- #
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="auto resolves to compiled on TPU")
+def test_resolve_interpret_auto_and_override():
+    # off-TPU, auto (None) must choose interpreter mode
+    assert resolve_interpret(None) is True
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_bucket_pow2_bounds_shapes():
+    assert [bucket_pow2(b, 8) for b in (1, 8, 9, 16, 17, 24, 33, 64)] \
+        == [8, 8, 16, 16, 32, 32, 64, 64]
+    # distinct padded widths over 1..512 are log-bounded, not linear
+    widths = {bucket_pow2(b, 8) for b in range(1, 513)}
+    assert len(widths) == 7
+
+
+# --------------------------------------------------------------------------- #
+# kernel-level parity: fleet-shaped (vmapped, per-twin weights) + gradients
+# --------------------------------------------------------------------------- #
+def _fleet_gru_inputs(seed, F, B, T, D, H):
+    keys = jax.random.split(jax.random.PRNGKey(seed), F + 1)
+    params = jax.vmap(lambda k: init_gru_params(k, D, H))(keys[:F])
+    xs = jax.random.normal(keys[F], (F, B, T, D))
+    h0 = jnp.zeros((F, B, H))
+    return params, xs, h0
+
+
+def test_gru_fleet_vmap_grad_parity():
+    """Per-twin weights under vmap(grad): the exact refit-path invocation."""
+    p, xs, h0 = _fleet_gru_inputs(0, 3, 8, 12, 5, 16)
+
+    def loss(kw):
+        def one(wx, wh, b, x, h):
+            hs, hT = gru_scan(x, h, wx, wh, b, **kw)
+            return jnp.sum(hT ** 2) + jnp.mean(hs ** 2)
+        return jax.vmap(one)(p["wx"], p["wh"], p["b"], xs, h0)
+
+    def grads(kw):
+        def one(wx, wh, b, x, h):
+            def inner(wx):
+                hs, hT = gru_scan(x, h, wx, wh, b, **kw)
+                return jnp.sum(hT ** 2) + jnp.mean(hs ** 2)
+            return jax.grad(inner)(wx)
+        return jax.vmap(one)(p["wx"], p["wh"], p["b"], xs, h0)
+
+    np.testing.assert_allclose(np.asarray(loss(PALLAS)), np.asarray(loss({})),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(grads(PALLAS)),
+                               np.asarray(grads({})), rtol=1e-4, atol=1e-5)
+
+
+def test_gru_batched_entry_folds_leading_axes():
+    """Shared-weight 4-d xs folds into the batch axis inside the wrapper."""
+    key = jax.random.PRNGKey(1)
+    p = init_gru_params(key, 4, 8)
+    xs = jax.random.normal(key, (3, 5, 7, 4))
+    h0 = jnp.zeros((3, 5, 8))
+    hs_p, hT_p = gru_scan(xs, h0, p["wx"], p["wh"], p["b"], **PALLAS)
+    hs_r, hT_r = gru_scan_ref(xs.reshape(15, 7, 4), h0.reshape(15, 8),
+                              p["wx"], p["wh"], p["b"])
+    assert hs_p.shape == (3, 5, 7, 8) and hT_p.shape == (3, 5, 8)
+    np.testing.assert_allclose(np.asarray(hs_p),
+                               np.asarray(hs_r.reshape(3, 5, 7, 8)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT_p),
+                               np.asarray(hT_r.reshape(3, 5, 8)), atol=1e-5)
+
+
+def test_gru_shape_guard_raises():
+    key = jax.random.PRNGKey(2)
+    p = init_gru_params(key, 4, 8)
+    xs = jax.random.normal(key, (2, 7, 4))
+    with pytest.raises(ValueError, match="inconsistent"):
+        gru_scan(xs, jnp.zeros((2, 9)), p["wx"], p["wh"], p["b"])
+
+
+def _rk4_inputs(seed, B, n, m, order, T, fleet=None):
+    lib = make_library(n, m, order)
+    shape = (B,) if fleet is None else (fleet, B)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    theta = 0.1 * jax.random.normal(k1, shape + (n, lib.size))
+    y0 = 0.3 * jax.random.normal(k2, shape + (n,))
+    us = 0.2 * jax.random.normal(k3, shape + (T, m))
+    return lib, theta, y0, us
+
+
+def test_rk4_fleet_vmap_grad_parity():
+    """RK4 under vmap(grad) — the decode leg of the refit train step."""
+    lib, theta, y0, us = _rk4_inputs(3, 6, 2, 1, 2, 10, fleet=3)
+
+    def grads(kw):
+        def one(th, y, u):
+            def inner(th):
+                ys = rk4_poly_solve(th, y, u, dt=0.02, library=lib, **kw)
+                return jnp.mean(ys ** 2)
+            return jax.grad(inner)(th)
+        return jax.vmap(one)(theta, y0, us)
+
+    np.testing.assert_allclose(np.asarray(grads(PALLAS)),
+                               np.asarray(grads({})), rtol=1e-4, atol=1e-6)
+
+
+def test_rk4_batched_entry_folds_leading_axes():
+    lib, theta, y0, us = _rk4_inputs(4, 5, 3, 1, 2, 8, fleet=2)
+    ys_p = rk4_poly_solve(theta, y0, us, dt=0.02, library=lib, **PALLAS)
+    ys_r = rk4_poly_solve_ref(theta.reshape(10, 3, lib.size),
+                              y0.reshape(10, 3), us.reshape(10, 8, 1),
+                              0.02, lib.term_indices)
+    assert ys_p.shape == (2, 5, 9, 3)
+    np.testing.assert_allclose(np.asarray(ys_p),
+                               np.asarray(ys_r.reshape(2, 5, 9, 3)), atol=1e-5)
+
+
+def test_rk4_autonomous_grad_parity():
+    """m == 0 exercises the dummy-input-channel leg with gradients."""
+    lib, theta, y0, us = _rk4_inputs(5, 4, 2, 0, 2, 6)
+
+    def g(kw):
+        def inner(th):
+            return jnp.mean(rk4_poly_solve(th, y0, us, dt=0.02, library=lib,
+                                           **kw) ** 2)
+        return jax.grad(inner)(theta)
+
+    np.testing.assert_allclose(np.asarray(g(PALLAS)), np.asarray(g({})),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_rk4_shape_guard_raises():
+    lib, theta, y0, us = _rk4_inputs(6, 4, 2, 1, 2, 6)
+    with pytest.raises(ValueError, match="library"):
+        rk4_poly_solve(theta[:, :, :-1], y0, us, dt=0.02, library=lib)
+
+
+# --------------------------------------------------------------------------- #
+# fleet refit parity: the fused train step is a pure backend swap
+# --------------------------------------------------------------------------- #
+def _fleet(use_pallas):
+    m = MerindaConfig(n=2, m=1, order=2, hidden=16, head_hidden=16,
+                      n_active=6, use_pallas=use_pallas,
+                      interpret=True if use_pallas else None)
+    return FleetMerinda(FleetConfig(merinda=m, fleet=4, windows_per_twin=8,
+                                    sparsify_after=3))
+
+
+def test_fleet_train_step_parity():
+    key = jax.random.PRNGKey(0)
+    y = 0.3 * jax.random.normal(key, (4, 8, 13, 2))
+    u = 0.2 * jax.random.normal(key, (4, 8, 12, 1))
+    ref, pal = _fleet(False), _fleet(True)
+    s_r, s_p = ref.init(jax.random.PRNGKey(1)), pal.init(jax.random.PRNGKey(1))
+    for _ in range(6):     # crosses the sparsify_after=3 warmup boundary
+        s_r, loss_r, ok_r = ref.train_step_per_slot(s_r, y, u)
+        s_p, loss_p, ok_p = pal.train_step_per_slot(s_p, y, u)
+        np.testing.assert_allclose(np.asarray(loss_r), np.asarray(loss_p),
+                                   rtol=1e-4, atol=1e-5)
+        assert bool(jnp.all(ok_r == ok_p))
+    for a, b in zip(jax.tree.leaves(s_r["params"]),
+                    jax.tree.leaves(s_p["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    th_r = ref.recover_all(s_r, y, u)
+    th_p = pal.recover_all(s_p, y, u)
+    np.testing.assert_allclose(np.asarray(th_r), np.asarray(th_p),
+                               rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: the 64-twin online serving loop, reference vs Pallas backend
+# --------------------------------------------------------------------------- #
+def _server_cfg(use_pallas, n, m, dt):
+    from repro.twin.monitor import GuardConfig
+    from repro.twin.server import TwinServerConfig
+    return TwinServerConfig(
+        merinda=MerindaConfig(n=n, m=m, order=2, dt=dt, hidden=16,
+                              head_hidden=16, n_active=12,
+                              use_pallas=use_pallas,
+                              interpret=True if use_pallas else None),
+        max_twins=64, refit_slots=8, capacity=128, window=16, stride=8,
+        windows_per_twin=4, steps_per_tick=2, deploy_after=4,
+        min_residency=2, max_residency=8, guard=GuardConfig(window=16),
+        seed=7)
+
+
+def test_server_64twin_parity():
+    """Acceptance gate: `use_pallas=True` runs the 64-twin online loop end to
+    end (interpret mode on CPU) and every per-tick output — refit loss,
+    deployed theta store, per-twin divergence scores, prediction rollouts —
+    matches the reference backend within float32 kernel tolerance."""
+    from repro.systems.f8_crusader import F8Crusader
+    from repro.systems.simulate import simulate_batch
+    from repro.twin.server import TwinServer
+
+    system = F8Crusader()
+    n_twins, chunk, ticks = 64, 8, 10
+    trace = simulate_batch(system, jax.random.PRNGKey(3), batch=n_twins,
+                           horizon=chunk * ticks + 1, noise_std=0.002)
+    ys, us = np.asarray(trace.ys_noisy), np.asarray(trace.us)
+
+    servers = [TwinServer(_server_cfg(up, system.spec.n, system.spec.m,
+                                      system.spec.dt)) for up in (False, True)]
+    reports = [[], []]
+    for t in range(ticks):
+        lo = t * chunk
+        for j, srv in enumerate(servers):
+            for i in range(n_twins):
+                srv.ingest(i, ys[i, lo:lo + chunk], us[i, lo:lo + chunk])
+            reports[j].append(srv.tick())
+
+    for rep_r, rep_p in zip(*reports):
+        assert rep_r.n_active == rep_p.n_active
+        assert rep_r.admitted == rep_p.admitted
+        if rep_r.loss is None:
+            assert rep_p.loss is None
+        else:
+            np.testing.assert_allclose(rep_r.loss, rep_p.loss,
+                                       rtol=1e-3, atol=1e-4)
+    ref, pal = servers
+    deployed_r = {t for t, r in ref.twins.items() if r.deployed}
+    deployed_p = {t for t, r in pal.twins.items() if r.deployed}
+    assert deployed_r == deployed_p and deployed_r
+    np.testing.assert_allclose(np.asarray(ref._theta), np.asarray(pal._theta),
+                               rtol=1e-3, atol=1e-4)
+    div_r = [ref.twins[t].divergence for t in sorted(ref.twins)]
+    div_p = [pal.twins[t].divergence for t in sorted(pal.twins)]
+    np.testing.assert_allclose(div_r, div_p, rtol=1e-3, atol=1e-5)
+    tid = sorted(deployed_r)[0]
+    np.testing.assert_allclose(np.asarray(ref.predict(tid, 12)),
+                               np.asarray(pal.predict(tid, 12)),
+                               rtol=1e-3, atol=1e-4)

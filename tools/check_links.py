@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in README.md and docs/*.md (stdlib only).
+
+Checks every markdown inline link `[text](target)` whose target is not an
+external URL (http/https/mailto) or a pure in-page anchor.  Relative targets
+are resolved against the file they appear in; a `#fragment` suffix is
+stripped before the existence check (anchor names are not validated —
+file-level breakage is what bites in reviews).  Exits 1 listing every broken
+link.  Run from the repo root:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def check(md: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if path.startswith("/"):
+                # GitHub-style root-absolute link: resolve against the repo
+                # root, not the filesystem root
+                resolved = (ROOT / path.lstrip("/")).resolve()
+            else:
+                resolved = (md.parent / path).resolve()
+            if not resolved.is_relative_to(ROOT):
+                # escapes the repo (e.g. the ../../actions/... CI badge):
+                # points at the hosting site, nothing on disk to validate
+                continue
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}:{lineno}: broken "
+                              f"link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"missing expected file: {f.relative_to(ROOT)}")
+        return 1
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(e)
+    print(f"[check_links] {len(files)} files, "
+          f"{'FAIL: ' + str(len(errors)) + ' broken' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
