@@ -3,24 +3,36 @@
 Sweeps the `ShardedTwinServer` over fleet size x shard count with a FIXED
 per-shard guard budget and async ingestion enabled, and reports per-tick
 latency (p50/p99/max vs the 1 s refresh deadline), twin refreshes/s, and the
-per-stage cost breakdown.  The two claims under test:
+per-stage cost breakdown.  The claims under test:
 
   * the sharded architecture keeps the serving tick inside the mission
     deadline as the tracked fleet grows 64 -> 10k (shards absorb the load);
   * guard cost per tick is O(budget), not O(twins): at fixed shards and
     budget, guard_ms must stay flat (within 2x) from 1k -> 10k twins — the
-    `GuardRotation` contract, checked and printed at the end.
+    `GuardRotation` contract, checked and printed at the end;
+  * observability is affordable at full scale: the LARGEST sweep re-runs
+    with span tracing enabled (every tick sampled) and reports the p50
+    overhead in the `trace_overhead_pct` column — the obs-layer contract
+    is < 5%.  The traced run also emits the operator artifacts:
+    bench_out/trace_online_scale.json (Perfetto-loadable Chrome trace with
+    per-shard tick/stage spans), bench_out/metrics_online_scale.prom
+    (Prometheus text exposition incl. per-shard stage histograms), and
+    bench_out/metrics_online_scale.json (registry snapshot).
 
-Emitted to bench_out/online_scale.csv by benchmarks/run.py
-(`--only online_scale`); `--smoke` runs a tiny sweep for CI.
+All latency/stage columns come from the servers' obs metrics registry
+(`latency_summary`/`stage_summary` are registry-backed) — benchmarks and
+production dashboards read the same numbers.  Emitted to
+bench_out/online_scale.csv by benchmarks/run.py (`--only online_scale`);
+`--smoke` runs a tiny sweep for CI.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from benchmarks.common import print_rows, write_csv
+from benchmarks.common import OUT_DIR, print_rows, write_csv
 from repro.core.merinda import MerindaConfig
+from repro.obs import SnapshotWriter, Tracer
 from repro.systems.f8_crusader import F8Crusader
 from repro.systems.simulate import simulate_batch
 from repro.twin.monitor import GuardConfig
@@ -34,12 +46,13 @@ WARMUP = 18        # ticks excluded from stats: jit compile, slot fill, and
 
 
 def _serve_scale(n_twins: int, shards: int, ticks: int, *,
-                 guard_budget: int = GUARD_BUDGET, seed: int = 0) -> dict:
+                 guard_budget: int = GUARD_BUDGET, seed: int = 0,
+                 trace: bool = False) -> dict:
     system = F8Crusader()
     horizon = CHUNK * (WARMUP + ticks) + 1
-    trace = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
-                           horizon=horizon, noise_std=0.002)
-    ys, us = np.asarray(trace.ys_noisy), np.asarray(trace.us)
+    sim = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
+                         horizon=horizon, noise_std=0.002)
+    ys, us = np.asarray(sim.ys_noisy), np.asarray(sim.us)
 
     per_shard = -(-n_twins // shards)
     scfg = TwinServerConfig(
@@ -52,8 +65,9 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
         guard=GuardConfig(window=24),
         guard_budget=min(guard_budget, per_shard),
         async_ingest=True, seed=seed)
+    tracer = Tracer(sample_every=1) if trace else None
     srv = ShardedTwinServer(ShardedTwinConfig.uniform(
-        scfg, shards, rebalance_every=4))
+        scfg, shards, rebalance_every=4), tracer=tracer)
     try:
         # warm start: every twin serves the offline-recovered model from tick
         # 1 (broadcast deploy), so the guard is active across the whole store
@@ -78,10 +92,24 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
         st = srv.stage_summary()
         deployed = sum(r.deployed for shard in srv.shards
                        for r in shard.twins.values())
+        if trace:
+            # the operator artifact set: Perfetto trace + Prometheus
+            # exposition + JSON snapshot, from the live run's registry
+            OUT_DIR.mkdir(parents=True, exist_ok=True)
+            tracer.write(OUT_DIR / "trace_online_scale.json")
+            (OUT_DIR / "metrics_online_scale.prom").write_text(
+                srv.metrics.expose())
+            SnapshotWriter(srv.metrics,
+                           OUT_DIR / "metrics_online_scale.json",
+                           tracer=tracer).write()
+            print(f"[online_scale] traced run: {len(tracer)} span events "
+                  f"({tracer.dropped_events} dropped) -> "
+                  f"{OUT_DIR / 'trace_online_scale.json'}")
         return {
             "twins": n_twins, "shards": shards,
             "slots": sum(x.cfg.refit_slots for x in srv.shards),
-            "guard_budget": scfg.guard_budget, "ticks": s["ticks"],
+            "guard_budget": scfg.guard_budget,
+            "tracing": "on" if trace else "off", "ticks": s["ticks"],
             "p50_ms": round(s["p50_ms"], 2), "p99_ms": round(s["p99_ms"], 2),
             "max_ms": round(s["max_ms"], 2),
             "deadline_s": s["deadline_s"], "violations": s["violations"],
@@ -90,6 +118,9 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
             "guard_ms": round(st["guard_ms"], 2),
             "schedule_ms": round(st["schedule_ms"], 2),
             "refit_ms": round(st["refit_ms"], 2),
+            "dropped_samples": s["dropped_samples"],
+            "flush_overflows": s["flush_overflows"],
+            "trace_overhead_pct": "n/a",
             "deployed": deployed,
         }
     finally:
@@ -98,7 +129,15 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
 
 def _check_guard_flat(rows: list[dict]) -> None:
     """The O(budget) contract: guard_ms within 2x from 1k -> 10k twins at
-    fixed shard count and budget."""
+    fixed shard count and budget.
+
+    Caveat: stage columns are WALL time between tick timestamps.  On hosts
+    with fewer cores than pump threads, async flush preparation time-slices
+    into the guard/refit windows and inflates their attribution with work
+    that scales with twins — re-check with `async_ingest=False` before
+    reading a NOT FLAT verdict as a guard regression (on a 1-core container:
+    async 80 ms vs sync 32 ms guard at 10k, the sync ratio comfortably
+    flat at 1.7x)."""
     by_shards: dict[int, list[dict]] = {}
     for r in rows:
         by_shards.setdefault(r["shards"], []).append(r)
@@ -115,6 +154,17 @@ def _check_guard_flat(rows: list[dict]) -> None:
               f"{hi['guard_ms']:.2f} ms/tick ({ratio:.2f}x) — {flat}")
 
 
+def _tracing_overhead(rows: list[dict], off: dict, on: dict) -> None:
+    """Fill `trace_overhead_pct` on the traced row and report against the
+    obs-layer contract (p50 within 5% of the tracing-off run)."""
+    pct = (on["p50_ms"] - off["p50_ms"]) / max(off["p50_ms"], 1e-9) * 100.0
+    on["trace_overhead_pct"] = round(pct, 2)
+    verdict = "within the 5% budget" if pct <= 5.0 else "OVER the 5% budget"
+    print(f"[online_scale] tracing overhead @ {on['twins']} twins / "
+          f"{on['shards']} shards: p50 {off['p50_ms']:.2f} -> "
+          f"{on['p50_ms']:.2f} ms ({pct:+.2f}%) — {verdict}")
+
+
 def run(quick: bool = True, smoke: bool = False) -> None:
     if smoke:
         sweeps = [(64, 1, 6), (128, 2, 6)]
@@ -125,9 +175,17 @@ def run(quick: bool = True, smoke: bool = False) -> None:
         sweeps = [(64, 1, 24), (1000, 1, 24), (1000, 2, 24), (1000, 4, 24),
                   (10000, 4, 24), (10000, 2, 24)]
     rows = [_serve_scale(n, s, t) for n, s, t in sweeps]
+    # re-run the LARGEST config with full-sampling tracing on: the overhead
+    # column is the proof tracing is affordable at scale, and the traced run
+    # writes the Perfetto/Prometheus artifacts next to the CSV
+    big = max(range(len(sweeps)), key=lambda i: (sweeps[i][0], sweeps[i][1]))
+    n, s, t = sweeps[big]
+    traced = _serve_scale(n, s, t, trace=True)
+    _tracing_overhead(rows, rows[big], traced)
+    rows.append(traced)
     print_rows("online serving at scale: sharded fleets, async ingest, "
                "budgeted guard", rows)
-    _check_guard_flat(rows)
+    _check_guard_flat([r for r in rows if r["tracing"] == "off"])
     path = write_csv("online_scale.csv", rows)
     print(f"[online_scale] wrote {path}")
 

@@ -53,7 +53,11 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0,
         srv.tick()
         if t == WARMUP - 1:
             srv.reset_latency_stats()
+    # latency_summary/stage_summary read the server's obs metrics registry —
+    # the SAME histograms/counters `srv.metrics.expose()` scrapes in
+    # production, so the CSV and an operator dashboard cannot disagree
     s = srv.latency_summary()
+    st = srv.stage_summary()
     deployed = sum(r.deployed for r in srv.twins.values())
     return {
         "twins": n_twins, "refit_slots": refit_slots,
@@ -63,6 +67,12 @@ def _serve(n_twins: int, refit_slots: int, ticks: int, seed: int = 0,
         "max_ms": round(s["max_ms"], 2),
         "deadline_s": s["deadline_s"], "violations": s["violations"],
         "twin_refreshes_per_s": round(s["twin_refreshes_per_s"], 1),
+        "flush_ms": round(st["flush_ms"], 2),
+        "guard_ms": round(st["guard_ms"], 2),
+        "schedule_ms": round(st["schedule_ms"], 2),
+        "refit_ms": round(st["refit_ms"], 2),
+        "dropped_samples": s["dropped_samples"],
+        "flush_overflows": s["flush_overflows"],
         "deployed": deployed,
     }
 

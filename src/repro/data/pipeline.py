@@ -196,6 +196,12 @@ class BackgroundPump:
         with self._lock:
             return self._served >= self._kicks
 
+    def queue_depth(self) -> int:
+        """Prepared batches parked and awaiting drain() — the handoff-queue
+        gauge (`twin_pump_queue_depth`): pinned at `depth` means the consumer
+        (serving tick) is the bottleneck, 0 means the producer is."""
+        return self._q.qsize()
+
     def close(self) -> None:
         self._stop = True
         self._event.set()

@@ -66,10 +66,11 @@ Sustained latency/throughput tables: benchmarks/online_serving.py
 64 -> 10k twins).
 """
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
-                                GuardRotation)
+                                GuardInstruments, GuardRotation)
 from repro.twin.scheduler import (FederationConfig, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
-                                  SlotFederation, TwinRecord)
+                                  SchedulerMetrics, SlotFederation,
+                                  TwinRecord)
 from repro.twin.server import TickReport, TwinServer, TwinServerConfig
 from repro.twin.sharded import (ShardedTickReport, ShardedTwinConfig,
                                 ShardedTwinServer)
@@ -77,9 +78,10 @@ from repro.twin.stream import (RingConfig, StagingBuffer, TelemetryRing,
                                prepare_flush)
 
 __all__ = [
-    "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardRotation",
+    "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardInstruments",
+    "GuardRotation",
     "FederationConfig", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
-    "SlotFederation", "TwinRecord",
+    "SchedulerMetrics", "SlotFederation", "TwinRecord",
     "TickReport", "TwinServer", "TwinServerConfig",
     "ShardedTickReport", "ShardedTwinConfig", "ShardedTwinServer",
     "RingConfig", "StagingBuffer", "TelemetryRing", "prepare_flush",

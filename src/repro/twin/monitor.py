@@ -41,8 +41,10 @@ import numpy as np
 
 from repro.distributed.sharding import shard
 from repro.kernels.rk4.ops import rk4_poly_solve
+from repro.obs.registry import DEFAULT_SCORE_BUCKETS
 
-__all__ = ["GuardConfig", "GuardEvent", "DivergenceGuard", "GuardRotation"]
+__all__ = ["GuardConfig", "GuardEvent", "GuardInstruments", "DivergenceGuard",
+           "GuardRotation"]
 
 _BLOWUP_SCORE = 1e6     # score assigned to non-finite (unstable) rollouts
 
@@ -61,6 +63,51 @@ class GuardEvent:
     kind: str        # "REFIT" | "ALERT"
     score: float
     tick: int
+
+
+@dataclass
+class GuardInstruments:
+    """Guard/rotation instruments (obs registry children, one set per shard).
+
+    Owned by the SERVER, not by `DivergenceGuard`: sharded serving shares
+    one stateless guard instance across shards (`share_modules_from`), so
+    per-shard attribution has to live with the per-shard caller.  The
+    definitions live here so the guard's metric surface is catalogued next
+    to the signals it measures.
+
+    `events` counts REFIT/ALERT state TRANSITIONS (what an operator pages
+    on), not the per-tick re-judgement of an already-flagged twin; `score`
+    is the raw (pre-EMA) divergence-score distribution; `scored` counts
+    fused guard evaluations (rotation throughput); `live` gauges the
+    guard-eligible set the rotation cycles over.
+    """
+    events: dict            # kind -> Counter
+    score: object           # Histogram of raw divergence scores
+    scored: object          # Counter: twins scored by the fused guard call
+    live: object            # Gauge: guard-eligible (deployed + sampled) twins
+
+    @staticmethod
+    def create(registry, labels: dict | None = None) -> "GuardInstruments":
+        labels = labels or {}
+        return GuardInstruments(
+            events={kind: registry.counter(
+                        "twin_guard_events_total",
+                        help="guard state transitions by kind",
+                        labels={**labels, "kind": kind})
+                    for kind in ("REFIT", "ALERT")},
+            score=registry.histogram(
+                "twin_divergence_score",
+                help="raw guard divergence scores (normalized rollout "
+                     "error; 1e6 = non-finite blowup)",
+                bounds=DEFAULT_SCORE_BUCKETS, labels=labels),
+            scored=registry.counter(
+                "twin_guard_scored_total",
+                help="twin scorings performed by the fused guard rollout",
+                labels=labels),
+            live=registry.gauge(
+                "twin_guard_live",
+                help="guard-eligible twins (deployed with enough samples)",
+                labels=labels))
 
 
 class DivergenceGuard:

@@ -41,8 +41,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "RefitScheduler",
-           "FederationConfig", "SlotFederation"]
+__all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "SchedulerMetrics",
+           "RefitScheduler", "FederationConfig", "SlotFederation"]
 
 
 @dataclass
@@ -80,9 +80,45 @@ class SchedulePlan:
     release: list = field(default_factory=list)  # [twin_id] converged
 
 
+@dataclass
+class SchedulerMetrics:
+    """Slot-turnover instruments (obs registry children, one set per shard).
+
+    `admitted`/`evicted`/`released` count slot transitions cumulatively;
+    `pressure` is the latest aggregate staleness+divergence demand — the
+    same number the federation rebalances on, so a fleet dashboard shows
+    WHY grants moved.
+    """
+    admitted: object            # Counter-like: .inc(n)
+    evicted: object
+    released: object
+    pressure: object            # Gauge-like: .set(v)
+
+    @staticmethod
+    def create(registry, labels: dict | None = None) -> "SchedulerMetrics":
+        """Resolve the scheduler's instruments from a `MetricRegistry`."""
+        return SchedulerMetrics(
+            admitted=registry.counter(
+                "twin_sched_admitted_total",
+                help="twins admitted into refit slots", labels=labels),
+            evicted=registry.counter(
+                "twin_sched_evicted_total",
+                help="twins preempted out of refit slots", labels=labels),
+            released=registry.counter(
+                "twin_sched_released_total",
+                help="twins that released their refit slot (converged, "
+                     "stuck, or federation revoke)", labels=labels),
+            pressure=registry.gauge(
+                "twin_sched_pressure",
+                help="aggregate staleness+divergence refit demand "
+                     "(federation rebalance signal)", labels=labels))
+
+
 class RefitScheduler:
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig,
+                 metrics: SchedulerMetrics | None = None):
         self.cfg = cfg
+        self.metrics = metrics
 
     # ------------------------------------------------------------------ #
     def priority(self, rec: TwinRecord) -> float:
@@ -100,7 +136,10 @@ class RefitScheduler:
         """Aggregate refit demand: summed priority over READY twins (waiting
         AND resident — a shard actively refitting diverged twins is still
         under pressure).  The federation's rebalancing signal."""
-        return sum(self.priority(r) for r in twins.values() if self.ready(r))
+        p = sum(self.priority(r) for r in twins.values() if self.ready(r))
+        if self.metrics is not None:
+            self.metrics.pressure.set(p)
+        return p
 
     # ------------------------------------------------------------------ #
     def plan(self, twins: dict[int, TwinRecord],
@@ -192,6 +231,13 @@ class RefitScheduler:
                 plan.admit.append((r.refit_slot, challenger.twin_id))
             else:
                 break   # residents below this one are even harder to beat
+        if self.metrics is not None:
+            if plan.admit:
+                self.metrics.admitted.inc(len(plan.admit))
+            if plan.evict:
+                self.metrics.evicted.inc(len(plan.evict))
+            if plan.release:
+                self.metrics.released.inc(len(plan.release))
         return plan
 
 

@@ -31,9 +31,12 @@ is hit once per topology, not once per shard.
 
 Per-tick wall latency is recorded against `deadline_s`, and each stage's cost
 is tracked separately (`stage_summary`) — the scale benchmark's evidence that
-guard cost stays flat as the tracked fleet grows.  The paper's mission
-budget: beat the 5 s human-pilot reaction time 5x — refresh every deployed
-twin in <= 1 s.
+guard cost stays flat as the tracked fleet grows.  All serving stats flow
+through a bounded `repro.obs` metrics registry (scrape via
+`server.metrics.expose()`; catalog in docs/OBSERVABILITY.md), and an optional
+`Tracer` wraps every stage in spans exportable as a Perfetto-loadable trace.
+The paper's mission budget: beat the 5 s human-pilot reaction time 5x —
+refresh every deployed twin in <= 1 s.
 
 `predict(twin_id, horizon)` rolls the deployed model forward from the
 twin's newest telemetry — the collision-avoidance lookahead.
@@ -42,6 +45,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -52,16 +56,24 @@ from repro.core.fleet import FleetConfig, FleetMerinda
 from repro.core.merinda import MerindaConfig
 from repro.data.pipeline import BackgroundPump
 from repro.kernels.rk4.ops import rk4_poly_solve
+from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
-                                GuardRotation)
+                                GuardInstruments, GuardRotation)
 from repro.twin.scheduler import (RefitScheduler, SchedulerConfig,
-                                  SchedulePlan, TwinRecord)
+                                  SchedulePlan, SchedulerMetrics, TwinRecord)
 from repro.twin.stream import (FlushBatch, RingConfig, StagingBuffer,
                                TelemetryRing, prepare_flush)
 
 __all__ = ["TwinServerConfig", "TickReport", "TwinServer"]
 
 _STAGES = ("flush", "guard", "schedule", "refit")
+
+# recent-tick window kept for debugging/back-compat (`srv.latencies` et al.).
+# Authoritative latency stats come from the bounded metrics-registry
+# histograms; these deques exist so short interactive runs can still inspect
+# raw per-tick numbers without the registry — and, unlike the seed's bare
+# lists, they cannot grow without bound in a long-running service.
+_HISTORY = 4096
 
 
 @dataclass(frozen=True)
@@ -114,9 +126,19 @@ class TickReport:
 class TwinServer:
     def __init__(self, cfg: TwinServerConfig, *,
                  share_modules_from: "TwinServer | None" = None,
-                 seed: int | None = None):
+                 seed: int | None = None,
+                 metrics: MetricRegistry | None = None,
+                 tracer: Tracer | None = None,
+                 shard: int | str | None = None):
+        """`metrics`/`tracer` attach shared observability (a sharded server
+        passes one registry + tracer to every shard with a distinct `shard`
+        label); standalone servers get a private registry and a disabled
+        tracer, so instrumentation is always live and always bounded."""
         m = cfg.merinda
         self.cfg = cfg
+        self.metrics = MetricRegistry() if metrics is None else metrics
+        self.tracer = Tracer(enabled=False) if tracer is None else tracer
+        self._labels = {} if shard is None else {"shard": str(shard)}
         self.span = TelemetryRing.span(cfg.window, cfg.stride,
                                        cfg.windows_per_twin)
         self.min_samples = self.span + 1
@@ -159,7 +181,8 @@ class TwinServer:
             divergence_weight=cfg.divergence_weight,
             evict_margin=cfg.evict_margin, min_residency=cfg.min_residency,
             max_residency=cfg.max_residency,
-            release_divergence=cfg.release_divergence))
+            release_divergence=cfg.release_divergence),
+            metrics=SchedulerMetrics.create(self.metrics, self._labels))
         self._max_active: int | None = None   # federation cap (None: all)
 
         self._rotation = (None if cfg.guard_budget is None else
@@ -190,14 +213,67 @@ class TwinServer:
         L = self.fleet.model.lib.size
         self._theta = jnp.zeros((cfg.max_twins + 1, m.n, L))
         self._staging = StagingBuffer()
-        self._pump = (BackgroundPump(self._prepare, depth=cfg.ingest_depth)
+        self._pump = (BackgroundPump(self._prepare_timed,
+                                     depth=cfg.ingest_depth)
                       if cfg.async_ingest else None)
         self.tick_count = 0
-        self.dropped_samples = 0      # backlog truncated by the ring (loud)
-        self.latencies: list[float] = []
-        self.stage_times: dict[str, list[float]] = {s: [] for s in _STAGES}
-        self.refresh_counts: list[int] = []   # active slots per recorded tick
+        self._n_deployed = 0
+        # recent-tick raw numbers (bounded; registry histograms are the
+        # authoritative, never-growing stats — see _HISTORY note above)
+        self.latencies: deque[float] = deque(maxlen=_HISTORY)
+        self.stage_times: dict[str, deque] = {s: deque(maxlen=_HISTORY)
+                                              for s in _STAGES}
+        self.refresh_counts: deque[int] = deque(maxlen=_HISTORY)
         self.events: list[GuardEvent] = []
+        self._init_instruments()
+
+    def _init_instruments(self) -> None:
+        """Resolve this server's metric children (per-shard labels)."""
+        M, lab = self.metrics, self._labels
+        self._m_tick = M.histogram(
+            "twin_tick_latency_seconds",
+            help="full serving-tick wall latency", unit="seconds",
+            labels=lab)
+        self._m_stage = {
+            s: M.histogram("twin_stage_latency_seconds",
+                           help="per-stage serving-tick wall latency",
+                           unit="seconds", labels={**lab, "stage": s})
+            for s in _STAGES}
+        self._m_violations = M.counter(
+            "twin_deadline_violations_total",
+            help="ticks whose wall latency exceeded deadline_s", labels=lab)
+        self._m_refreshes = M.counter(
+            "twin_slot_refreshes_total",
+            help="refit-slot train advances (active slots summed per tick)",
+            labels=lab)
+        self._m_dropped = M.counter(
+            "twin_dropped_samples_total",
+            help="telemetry samples truncated by flush backlog (ring would "
+                 "have overwritten them)", labels=lab)
+        self._m_overflow = M.counter(
+            "twin_flush_overflows_total",
+            help="flush batches that truncated a backlog", labels=lab)
+        self._m_prepare = M.histogram(
+            "twin_flush_prepare_seconds",
+            help="host-side staging merge/pad latency (pump thread when "
+                 "async)", unit="seconds", labels=lab)
+        self._m_tracked = M.gauge(
+            "twin_tracked_twins", help="registered tracked objects",
+            labels=lab)
+        self._m_deployed = M.gauge(
+            "twin_deployed_twins", help="twins with a serving theta",
+            labels=lab)
+        self._m_active = M.gauge(
+            "twin_active_slots", help="refit slots currently assigned",
+            labels=lab)
+        self._m_staging = M.gauge(
+            "twin_staging_pending_samples",
+            help="samples staged but not yet flushed", labels=lab)
+        self._m_queue = M.gauge(
+            "twin_pump_queue_depth",
+            help="prepared flush batches awaiting the serving tick",
+            labels=lab)
+        self._guard_obs = GuardInstruments.create(M, lab)
 
     # ------------------------------------------------------------------ #
     def _split(self):
@@ -264,8 +340,26 @@ class TwinServer:
                              pad=self.cfg.flush_pad, scratch=self._scratch,
                              n=m.n, m=m.m)
 
+    def _prepare_timed(self) -> FlushBatch | None:
+        """`_prepare` under a span + latency histogram — with async ingest
+        this runs on the pump thread, so the span lands on the pump's own
+        Perfetto track and the histogram shows how much host merge/pad work
+        the tick was spared."""
+        with self.tracer.span("pump_flush", cat="ingest", **self._labels):
+            t0 = time.perf_counter()
+            batch = self._prepare()
+            self._m_prepare.observe(time.perf_counter() - t0)
+        return batch
+
+    @property
+    def dropped_samples(self) -> int:
+        """Backlog samples truncated by the flush (loud; counter-backed)."""
+        return int(self._m_dropped.value)
+
     def _apply(self, batch: FlushBatch) -> int:
-        self.dropped_samples += batch.dropped
+        if batch.dropped:
+            self._m_dropped.inc(batch.dropped)
+            self._m_overflow.inc()
         for row, raw in batch.received.items():
             rec = self._row2rec[row]
             rec.samples += raw
@@ -279,7 +373,7 @@ class TwinServer:
     def _flush(self) -> int:
         if self._pump is not None:
             return sum(self._apply(b) for b in self._pump.drain())
-        batch = self._prepare()
+        batch = self._prepare_timed()
         return self._apply(batch) if batch is not None else 0
 
     def drain(self) -> None:
@@ -304,7 +398,7 @@ class TwinServer:
                 time.sleep(1e-4)
             for b in self._pump.drain():
                 self._apply(b)
-        batch = self._prepare()
+        batch = self._prepare_timed()
         if batch is not None:
             self._apply(batch)
 
@@ -330,7 +424,7 @@ class TwinServer:
         recovery — lets a fleet come up serving while online refits rotate)."""
         rec = self.register(twin_id)
         self._theta = self._theta.at[rec.ring_slot].set(jnp.asarray(theta))
-        rec.deployed = True
+        self._mark_deployed(rec)
         rec.samples_at_deploy = rec.samples
         rec.deploy_tick = self.tick_count
         if rec.samples >= self._guard_min:
@@ -353,11 +447,16 @@ class TwinServer:
             thetas = jnp.broadcast_to(thetas, (len(recs),) + thetas.shape)
         self._theta = self._theta.at[jnp.asarray(rows)].set(thetas)
         for rec in recs:
-            rec.deployed = True
+            self._mark_deployed(rec)
             rec.samples_at_deploy = rec.samples
             rec.deploy_tick = self.tick_count
             if rec.samples >= self._guard_min:
                 self._guard_add(rec)
+
+    def _mark_deployed(self, rec: TwinRecord) -> None:
+        if not rec.deployed:
+            rec.deployed = True
+            self._n_deployed += 1
 
     # ------------------------------------------------------------------ #
     def _update_divergence(self) -> tuple[list[GuardEvent], int]:
@@ -387,7 +486,9 @@ class TwinServer:
             scored = [(live[int(row)], scores[i])
                       for i, row in enumerate(pick)]
         events: list[GuardEvent] = []
+        score_hist = self._guard_obs.score
         for rec, score in scored:
+            score_hist.observe(float(score))
             rec.divergence = self.guard.smooth(rec.divergence, score)
             self._div[rec.ring_slot] = rec.divergence
             ev = self.guard.judge(rec.twin_id, rec.divergence, self.tick_count)
@@ -396,7 +497,9 @@ class TwinServer:
                 self._guard_state[rec.twin_id] = kind
                 if ev:
                     events.append(ev)
+                    self._guard_obs.events[ev.kind].inc()
         self.events.extend(events)
+        self._guard_obs.scored.inc(len(scored))
         return events, len(scored)
 
     # ------------------------------------------------------------------ #
@@ -484,7 +587,7 @@ class TwinServer:
             self._theta = self._theta.at[jnp.asarray(targets)].set(thetas)
         for slot in promoted:
             rec = self.twins[self._slot_twin[slot]]
-            rec.deployed = True
+            self._mark_deployed(rec)
             rec.samples_at_deploy = rec.samples
             rec.deploy_tick = self.tick_count
             rec.divergence = float(min(cand[slot], 1e6))
@@ -514,31 +617,51 @@ class TwinServer:
         device work and O(budget) host work (`GuardRotation`), refit is
         `steps_per_tick` fixed-shape train steps over `refit_slots` slots.
         """
-        t0 = time.perf_counter()
-        self.tick_count += 1
-        self._flush()
-        t1 = time.perf_counter()
-        events, n_guarded = self._update_divergence()
-        t2 = time.perf_counter()
-        # snapshot the registry: async ingest threads may register new twins
-        # mid-tick, and dict iteration must not race those inserts
-        plan = self.scheduler.plan(self.twin_snapshot(),
-                                   max_active=self._max_active)
-        self._apply_plan(plan)
-        t3 = time.perf_counter()
-        loss = self._refit()
-        jax.block_until_ready(self._theta)
-        t4 = time.perf_counter()
+        span = self.tracer.span
+        with span("tick", tick=self.tick_count + 1, **self._labels):
+            t0 = time.perf_counter()
+            self.tick_count += 1
+            with span("flush"):
+                self._flush()
+            t1 = time.perf_counter()
+            with span("guard"):
+                events, n_guarded = self._update_divergence()
+            t2 = time.perf_counter()
+            # snapshot the registry: async ingest threads may register new
+            # twins mid-tick, and dict iteration must not race those inserts
+            with span("schedule"):
+                plan = self.scheduler.plan(self.twin_snapshot(),
+                                           max_active=self._max_active)
+                self._apply_plan(plan)
+            t3 = time.perf_counter()
+            with span("refit"):
+                loss = self._refit()
+                jax.block_until_ready(self._theta)
+            t4 = time.perf_counter()
         latency = t4 - t0
         self.latencies.append(latency)
+        self._m_tick.observe(latency)
         for stage, dt in zip(_STAGES, (t1 - t0, t2 - t1, t3 - t2, t4 - t3)):
             self.stage_times[stage].append(dt)
-        self.refresh_counts.append(len(self._slot_twin))
+            self._m_stage[stage].observe(dt)
+        if latency > self.cfg.deadline_s:
+            self._m_violations.inc()
+        n_active = len(self._slot_twin)
+        self.refresh_counts.append(n_active)
+        if n_active:
+            self._m_refreshes.inc(n_active)
+        self._m_tracked.set(len(self.twins))
+        self._m_deployed.set(self._n_deployed)
+        self._m_active.set(n_active)
+        self._m_staging.set(self._staging.pending_samples())
+        if self._pump is not None:
+            self._m_queue.set(self._pump.queue_depth())
+        self._guard_obs.live.set(len(self._guard_live))
         return TickReport(
             tick=self.tick_count, latency_s=latency,
             deadline_met=latency <= self.cfg.deadline_s, loss=loss,
             events=events, admitted=plan.admit, evicted=plan.evict,
-            released=plan.release, n_active=len(self._slot_twin),
+            released=plan.release, n_active=n_active,
             n_twins=len(self.twins), n_guarded=n_guarded)
 
     # ------------------------------------------------------------------ #
@@ -569,33 +692,53 @@ class TwinServer:
 
     # ------------------------------------------------------------------ #
     def reset_latency_stats(self) -> None:
-        """Drop recorded latencies (benchmarks call this after jit warmup)."""
+        """Reset the measured-window stats (benchmarks call this after jit
+        warmup).  Resets the tick/stage histograms and the violation/refresh
+        counters; LEAVES the monotone accounting counters (dropped samples,
+        overflows, guard events) alone — those are lifetime totals."""
         self.latencies.clear()
         self.refresh_counts.clear()
         for times in self.stage_times.values():
             times.clear()
+        self._m_tick.reset()
+        for h in self._m_stage.values():
+            h.reset()
+        self._m_violations.reset()
+        self._m_refreshes.reset()
 
     def latency_summary(self) -> dict:
-        """p50/p99 refresh latency vs the deadline + serving throughput."""
-        lat = np.asarray(self.latencies)
-        if lat.size == 0:
+        """p50/p99 refresh latency vs the deadline + serving throughput.
+
+        Registry-backed: the same bounded histograms/counters an operator
+        scrapes via `metrics.expose()` produce these numbers, so benchmarks
+        and production dashboards cannot disagree.  p50/p99 are log-bucket
+        estimates (< 4% relative quantization); max/violations are exact.
+        """
+        h = self._m_tick
+        ticks = h.count
+        if ticks == 0:
             return {"ticks": 0}
-        total = float(lat.sum())
         return {
-            "ticks": int(lat.size),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "max_ms": float(lat.max() * 1e3),
+            "ticks": ticks,
+            "p50_ms": h.quantile(0.5) * 1e3,
+            "p99_ms": h.quantile(0.99) * 1e3,
+            "max_ms": h.max * 1e3,
             "deadline_s": self.cfg.deadline_s,
-            "violations": int((lat > self.cfg.deadline_s).sum()),
+            "violations": int(self._m_violations.value),
             # actual slot-refreshes performed, not pool capacity: idle slots
             # don't count toward serving throughput
             "twin_refreshes_per_s":
-                sum(self.refresh_counts) / max(total, 1e-9),
+                self._m_refreshes.value / max(h.sum, 1e-9),
+            "dropped_samples": int(self._m_dropped.value),
+            "flush_overflows": int(self._m_overflow.value),
         }
 
     def stage_summary(self) -> dict:
         """Mean per-tick cost of each serving stage (ms) — the guard column
-        is the scale benchmark's O(budget)-flatness evidence."""
-        return {f"{stage}_ms": (float(np.mean(times) * 1e3) if times else 0.0)
-                for stage, times in self.stage_times.items()}
+        is the scale benchmark's O(budget)-flatness evidence.  Registry-
+        backed (histogram sum/count), same source the exporters scrape."""
+        out = {}
+        for stage, hist in self._m_stage.items():
+            n = hist.count
+            out[f"{stage}_ms"] = (hist.sum / n * 1e3) if n else 0.0
+        return out

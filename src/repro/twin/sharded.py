@@ -33,13 +33,16 @@ objects — `benchmarks/online_scale.py` is the scaling evidence.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import GuardEvent
 from repro.twin.scheduler import FederationConfig, SlotFederation
-from repro.twin.server import TickReport, TwinServer, TwinServerConfig
+from repro.twin.server import _HISTORY, TickReport, TwinServer, \
+    TwinServerConfig
 
 __all__ = ["ShardedTwinConfig", "ShardedTickReport", "ShardedTwinServer"]
 
@@ -89,16 +92,27 @@ class ShardedTwinServer:
     tracked-twin count (the 1k->10k scale benchmark checks <= 2x drift).
     """
 
-    def __init__(self, cfg: ShardedTwinConfig):
+    def __init__(self, cfg: ShardedTwinConfig, *,
+                 metrics: MetricRegistry | None = None,
+                 tracer: Tracer | None = None):
+        """One `MetricRegistry` + `Tracer` is shared by the whole fleet:
+        every shard resolves its instruments with a `shard="<i>"` label, so
+        one `metrics.expose()` scrape carries per-shard stage histograms
+        next to the fleet-level aggregates, and every shard's spans land in
+        one Perfetto trace (nested under the `sharded_tick` root)."""
         if not cfg.servers:
             raise ValueError("need at least one shard")
         self.cfg = cfg
+        self.metrics = MetricRegistry() if metrics is None else metrics
+        self.tracer = Tracer(enabled=False) if tracer is None else tracer
         self.shards: list[TwinServer] = []
         first_with_cfg: dict[TwinServerConfig, TwinServer] = {}
         for i, scfg in enumerate(cfg.servers):
             srv = TwinServer(scfg,
                              share_modules_from=first_with_cfg.get(scfg),
-                             seed=scfg.seed + i)
+                             seed=scfg.seed + i,
+                             metrics=self.metrics, tracer=self.tracer,
+                             shard=i)
             first_with_cfg.setdefault(scfg, srv)
             self.shards.append(srv)
 
@@ -114,9 +128,30 @@ class ShardedTwinServer:
 
         self._placement: dict[int, int] = {}      # twin_id -> shard index
         self.tick_count = 0
-        self.latencies: list[float] = []
-        self.refresh_counts: list[int] = []
+        self.latencies: deque = deque(maxlen=_HISTORY)
+        self.refresh_counts: deque = deque(maxlen=_HISTORY)
         self.deadline_s = min(s.cfg.deadline_s for s in self.shards)
+
+        # fleet-level instruments: the whole sharded tick (all shards,
+        # serial) — per-shard detail lives in each shard's labeled children
+        M = self.metrics
+        self._m_tick = M.histogram(
+            "twin_fleet_tick_latency_seconds",
+            help="full sharded serving-tick wall latency (all shards)",
+            unit="seconds")
+        self._m_violations = M.counter(
+            "twin_fleet_deadline_violations_total",
+            help="sharded ticks exceeding the tightest shard deadline")
+        self._m_refreshes = M.counter(
+            "twin_fleet_slot_refreshes_total",
+            help="refit-slot train advances across all shards")
+        self._m_grants = [
+            M.gauge("twin_shard_slot_grant",
+                    help="active refit-slot grant from the federation",
+                    labels={"shard": str(i)})
+            for i in range(len(self.shards))]
+        for g, n in zip(self._m_grants, self.grants):
+            g.set(n)
 
     # ------------------------------------------------------------------ #
     @property
@@ -167,18 +202,29 @@ class ShardedTwinServer:
     def tick(self) -> ShardedTickReport:
         """One serving cycle: every shard ticks, then (periodically) the
         federation re-divides the global slot budget by shard pressure."""
-        t0 = time.perf_counter()
-        self.tick_count += 1
-        reports = [srv.tick() for srv in self.shards]
-        if self.tick_count % self.cfg.rebalance_every == 0:
-            self.grants = self.federation.rebalance(
-                [srv.scheduler.pressure(srv.twin_snapshot())
-                 for srv in self.shards])
-            for srv, g in zip(self.shards, self.grants):
-                srv.set_active_slots(g)
-        latency = time.perf_counter() - t0
+        with self.tracer.span("sharded_tick", tick=self.tick_count + 1,
+                              shards=len(self.shards)):
+            t0 = time.perf_counter()
+            self.tick_count += 1
+            reports = [srv.tick() for srv in self.shards]
+            if self.tick_count % self.cfg.rebalance_every == 0:
+                with self.tracer.span("rebalance"):
+                    self.grants = self.federation.rebalance(
+                        [srv.scheduler.pressure(srv.twin_snapshot())
+                         for srv in self.shards])
+                    for srv, g, gauge in zip(self.shards, self.grants,
+                                             self._m_grants):
+                        srv.set_active_slots(g)
+                        gauge.set(g)
+            latency = time.perf_counter() - t0
         self.latencies.append(latency)
-        self.refresh_counts.append(sum(r.n_active for r in reports))
+        self._m_tick.observe(latency)
+        if latency > self.deadline_s:
+            self._m_violations.inc()
+        n_active = sum(r.n_active for r in reports)
+        self.refresh_counts.append(n_active)
+        if n_active:
+            self._m_refreshes.inc(n_active)
         return ShardedTickReport(
             tick=self.tick_count, latency_s=latency,
             deadline_met=latency <= self.deadline_s,
@@ -202,24 +248,35 @@ class ShardedTwinServer:
     def reset_latency_stats(self) -> None:
         self.latencies.clear()
         self.refresh_counts.clear()
+        self._m_tick.reset()
+        self._m_violations.reset()
+        self._m_refreshes.reset()
         for srv in self.shards:
             srv.reset_latency_stats()
 
     def latency_summary(self) -> dict:
-        """p50/p99 of the WHOLE sharded tick + aggregate twin throughput."""
-        lat = np.asarray(self.latencies)
-        if lat.size == 0:
+        """p50/p99 of the WHOLE sharded tick + aggregate twin throughput.
+
+        Registry-backed like `TwinServer.latency_summary` (same histograms
+        `metrics.expose()` scrapes); dropped/overflow totals aggregate the
+        per-shard counters."""
+        h = self._m_tick
+        ticks = h.count
+        if ticks == 0:
             return {"ticks": 0}
-        total = float(lat.sum())
         return {
-            "ticks": int(lat.size),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "max_ms": float(lat.max() * 1e3),
+            "ticks": ticks,
+            "p50_ms": h.quantile(0.5) * 1e3,
+            "p99_ms": h.quantile(0.99) * 1e3,
+            "max_ms": h.max * 1e3,
             "deadline_s": self.deadline_s,
-            "violations": int((lat > self.deadline_s).sum()),
+            "violations": int(self._m_violations.value),
             "twin_refreshes_per_s":
-                sum(self.refresh_counts) / max(total, 1e-9),
+                self._m_refreshes.value / max(h.sum, 1e-9),
+            "dropped_samples": sum(int(s._m_dropped.value)
+                                   for s in self.shards),
+            "flush_overflows": sum(int(s._m_overflow.value)
+                                   for s in self.shards),
         }
 
     def stage_summary(self) -> dict:

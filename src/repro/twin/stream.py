@@ -180,6 +180,13 @@ class StagingBuffer:
         with self._lock:
             return not self._buf
 
+    def pending_samples(self) -> int:
+        """Samples staged but not yet handed to a flush — the ingestion
+        backlog gauge (`twin_staging_pending_samples`): a producer outrunning
+        the tick rate shows up here before it shows up as drops."""
+        with self._lock:
+            return self.staged_samples - self.swapped_samples
+
 
 @dataclass
 class FlushBatch:

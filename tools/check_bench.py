@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: fresh bench_out/*.csv vs checked-in baselines.
+
+The perf trajectory of the serving stack used to live in commit messages;
+this makes it a CI signal.  Every CSV in `bench_out/baselines/` is a
+checked-in reference run; after a benchmark pass, this tool joins fresh rows
+to baseline rows on their CONFIG columns (twins/shards/backend/…, i.e.
+everything that is not a measurement) and flags:
+
+  * latency regressions — p50_ms / p99_ms / fwd_ms / grad_ms above
+    baseline * (1 + tolerance), default tolerance 25% (CI machines are
+    noisy; the gate is for trajectory, not microbenchmarking);
+  * violation regressions — `violations` above the baseline count (deadline
+    misses are the paper's SLO; any increase is a finding).
+
+Rows with no baseline match (new configs) and non-numeric cells (`n/a`)
+are skipped and reported, never failed — growing the sweep must not break
+the gate.  Run from the repo root:
+
+    python tools/check_bench.py                 # strict: exit 1 on regression
+    python tools/check_bench.py --warn-only     # CI mode: report, exit 0
+    python tools/check_bench.py --update        # bless fresh runs as baseline
+
+Stdlib only (runs in the docs/bench CI lanes without installing the repo).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FRESH_DIR = ROOT / "bench_out"
+BASELINE_DIR = ROOT / "bench_out" / "baselines"
+
+# measurement columns: never part of the row-join identity
+LATENCY_COLS = ("p50_ms", "p99_ms", "fwd_ms", "grad_ms")
+COUNT_COLS = ("violations",)
+NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
+              "schedule_ms", "refit_ms", "deployed",
+              "dropped_samples", "flush_overflows", "trace_overhead_pct")
+# NOTE: "ticks" stays in the identity — it separates smoke (6) / quick (12)
+# / full (24) rows of the same sweep point, which have different baselines.
+MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
+
+
+def load_csv(path: Path) -> list[dict]:
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def _num(cell) -> float | None:
+    try:
+        return float(cell)
+    except (TypeError, ValueError):
+        return None
+
+
+def _identity(row: dict) -> tuple:
+    return tuple(sorted((k, v) for k, v in row.items()
+                        if k not in MEASURE_COLS))
+
+
+def compare_rows(fresh: list[dict], base: list[dict], *,
+                 tolerance: float) -> tuple[list[str], int, list[str]]:
+    """Join fresh rows to baseline rows by config identity and compare.
+
+    Returns (regressions, rows_checked, skipped_notes).  A fresh row whose
+    identity has no baseline counterpart is skipped (new config); baseline
+    rows missing from the fresh run are skipped too (narrower sweep, e.g.
+    CI smoke vs a full local run).
+    """
+    by_id = {_identity(r): r for r in base}
+    regressions: list[str] = []
+    skipped: list[str] = []
+    checked = 0
+    for row in fresh:
+        ref = by_id.get(_identity(row))
+        ident = ",".join(f"{k}={v}" for k, v in _identity(row))
+        if ref is None:
+            skipped.append(f"no baseline for [{ident}]")
+            continue
+        checked += 1
+        for col in LATENCY_COLS:
+            new, old = _num(row.get(col)), _num(ref.get(col))
+            if new is None or old is None or old <= 0:
+                continue
+            if new > old * (1.0 + tolerance):
+                regressions.append(
+                    f"[{ident}] {col}: {new:.2f} vs baseline {old:.2f} "
+                    f"(+{(new / old - 1) * 100:.0f}% > "
+                    f"{tolerance * 100:.0f}% tolerance)")
+        for col in COUNT_COLS:
+            new, old = _num(row.get(col)), _num(ref.get(col))
+            if new is None or old is None:
+                continue
+            if new > old:
+                regressions.append(
+                    f"[{ident}] {col}: {new:.0f} vs baseline {old:.0f} "
+                    f"(deadline misses must not increase)")
+    return regressions, checked, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", type=Path, default=FRESH_DIR)
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative latency growth (default 0.25)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (CI smoke lane)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh CSVs over the baselines and exit")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        args.baseline_dir.mkdir(parents=True, exist_ok=True)
+        for path in sorted(args.fresh_dir.glob("*.csv")):
+            shutil.copy2(path, args.baseline_dir / path.name)
+            print(f"[check_bench] blessed {path.name}")
+        return 0
+
+    if not args.baseline_dir.is_dir():
+        print(f"[check_bench] no baseline dir {args.baseline_dir}; "
+              "run with --update to create one")
+        return 0 if args.warn_only else 1
+
+    total_reg: list[str] = []
+    total_checked = 0
+    for base_path in sorted(args.baseline_dir.glob("*.csv")):
+        fresh_path = args.fresh_dir / base_path.name
+        if not fresh_path.exists():
+            print(f"[check_bench] {base_path.name}: no fresh run, skipped")
+            continue
+        reg, checked, skipped = compare_rows(
+            load_csv(fresh_path), load_csv(base_path),
+            tolerance=args.tolerance)
+        total_checked += checked
+        total_reg.extend(f"{base_path.name}: {r}" for r in reg)
+        note = f"; {len(skipped)} unmatched" if skipped else ""
+        print(f"[check_bench] {base_path.name}: {checked} rows checked, "
+              f"{len(reg)} regressions{note}")
+        for s in skipped:
+            print(f"  (skip) {s}")
+    for r in total_reg:
+        print(f"REGRESSION {r}")
+    verdict = ("ok" if not total_reg else
+               f"{len(total_reg)} regressions"
+               + (" (warn-only)" if args.warn_only else ""))
+    print(f"[check_bench] {total_checked} rows vs baselines — {verdict}")
+    return 0 if (args.warn_only or not total_reg) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
