@@ -1,7 +1,10 @@
 """Scale benchmark: sharded serving from 64 to 10k tracked objects.
 
 Sweeps the `ShardedTwinServer` over fleet size x shard count with a FIXED
-per-shard guard budget and async ingestion enabled, and reports per-tick
+per-shard guard budget — async (`BackgroundPump`) ingestion by default, plus
+sync-ingest twin rows (the `ingest` CSV column) that isolate the 1-core
+pump-contention artifact from real stage-cost regressions — and reports
+per-tick
 latency (p50/p99/max vs the 1 s refresh deadline), twin refreshes/s, and the
 per-stage cost breakdown.  The claims under test:
 
@@ -47,7 +50,7 @@ WARMUP = 18        # ticks excluded from stats: jit compile, slot fill, and
 
 def _serve_scale(n_twins: int, shards: int, ticks: int, *,
                  guard_budget: int = GUARD_BUDGET, seed: int = 0,
-                 trace: bool = False) -> dict:
+                 trace: bool = False, sync: bool = False) -> dict:
     system = F8Crusader()
     horizon = CHUNK * (WARMUP + ticks) + 1
     sim = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
@@ -64,7 +67,7 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
         steps_per_tick=1, deploy_after=8, min_residency=4, max_residency=16,
         guard=GuardConfig(window=24),
         guard_budget=min(guard_budget, per_shard),
-        async_ingest=True, seed=seed)
+        async_ingest=not sync, seed=seed)
     tracer = Tracer(sample_every=1) if trace else None
     srv = ShardedTwinServer(ShardedTwinConfig.uniform(
         scfg, shards, rebalance_every=4), tracer=tracer)
@@ -109,6 +112,11 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
             "twins": n_twins, "shards": shards,
             "slots": sum(x.cfg.refit_slots for x in srv.shards),
             "guard_budget": scfg.guard_budget,
+            # ingest mode is part of the row identity: on hosts with fewer
+            # cores than pump threads, "pump" rows carry background flush
+            # work time-sliced into the stage columns — "sync" rows are the
+            # contention-free reference (see _check_guard_flat)
+            "ingest": "sync" if sync else "pump",
             "tracing": "on" if trace else "off", "ticks": s["ticks"],
             "p50_ms": round(s["p50_ms"], 2), "p99_ms": round(s["p99_ms"], 2),
             "max_ms": round(s["max_ms"], 2),
@@ -129,28 +137,30 @@ def _serve_scale(n_twins: int, shards: int, ticks: int, *,
 
 def _check_guard_flat(rows: list[dict]) -> None:
     """The O(budget) contract: guard_ms within 2x from 1k -> 10k twins at
-    fixed shard count and budget.
+    fixed shard count and budget, checked PER INGEST MODE.
 
-    Caveat: stage columns are WALL time between tick timestamps.  On hosts
-    with fewer cores than pump threads, async flush preparation time-slices
-    into the guard/refit windows and inflates their attribution with work
-    that scales with twins — re-check with `async_ingest=False` before
-    reading a NOT FLAT verdict as a guard regression (on a 1-core container:
-    async 80 ms vs sync 32 ms guard at 10k, the sync ratio comfortably
-    flat at 1.7x)."""
-    by_shards: dict[int, list[dict]] = {}
+    Stage columns are WALL time between tick timestamps.  On hosts with
+    fewer cores than pump threads, async ("pump") flush preparation
+    time-slices into the guard/refit windows and inflates their attribution
+    with work that scales with twins — a known 1-core contention artifact
+    (PR 6's NOT-FLAT verdict).  The "sync" rows exist precisely to separate
+    that artifact from a real guard regression: the contract verdict that
+    matters is the sync one."""
+    by_group: dict[tuple, list[dict]] = {}
     for r in rows:
-        by_shards.setdefault(r["shards"], []).append(r)
-    for shards, group in sorted(by_shards.items()):
+        by_group.setdefault((r["shards"], r["ingest"]), []).append(r)
+    for (shards, ingest), group in sorted(by_group.items()):
         group = [r for r in group if r["twins"] >= 1000]
         if len(group) < 2:
             continue
         lo = min(group, key=lambda r: r["twins"])
         hi = max(group, key=lambda r: r["twins"])
         ratio = hi["guard_ms"] / max(lo["guard_ms"], 1e-9)
-        flat = "FLAT (O(budget) holds)" if ratio < 2.0 else "NOT FLAT"
+        flat = "FLAT (O(budget) holds)" if ratio < 2.0 else (
+            "NOT FLAT (pump contention artifact on starved hosts — "
+            "trust the sync row)" if ingest == "pump" else "NOT FLAT")
         print(f"[online_scale] guard cost {lo['twins']} -> {hi['twins']} "
-              f"twins @ {shards} shards: {lo['guard_ms']:.2f} -> "
+              f"twins @ {shards} shards [{ingest}]: {lo['guard_ms']:.2f} -> "
               f"{hi['guard_ms']:.2f} ms/tick ({ratio:.2f}x) — {flat}")
 
 
@@ -166,20 +176,29 @@ def _tracing_overhead(rows: list[dict], off: dict, on: dict) -> None:
 
 
 def run(quick: bool = True, smoke: bool = False) -> None:
+    # sweep entries: (twins, shards, ticks, sync_ingest).  Each pump sweep
+    # point >= 1k twins gets a sync twin row so the guard-flatness verdict
+    # can separate pump contention from a real regression (see
+    # _check_guard_flat).
     if smoke:
-        sweeps = [(64, 1, 6), (128, 2, 6)]
+        sweeps = [(64, 1, 6, False), (128, 2, 6, False), (128, 2, 6, True)]
     elif quick:
-        sweeps = [(64, 1, 12), (1000, 1, 12), (1000, 2, 12), (1000, 4, 12),
-                  (10000, 4, 12)]
+        sweeps = [(64, 1, 12, False), (1000, 1, 12, False),
+                  (1000, 2, 12, False), (1000, 4, 12, False),
+                  (10000, 4, 12, False),
+                  (1000, 4, 12, True), (10000, 4, 12, True)]
     else:
-        sweeps = [(64, 1, 24), (1000, 1, 24), (1000, 2, 24), (1000, 4, 24),
-                  (10000, 4, 24), (10000, 2, 24)]
-    rows = [_serve_scale(n, s, t) for n, s, t in sweeps]
-    # re-run the LARGEST config with full-sampling tracing on: the overhead
-    # column is the proof tracing is affordable at scale, and the traced run
-    # writes the Perfetto/Prometheus artifacts next to the CSV
-    big = max(range(len(sweeps)), key=lambda i: (sweeps[i][0], sweeps[i][1]))
-    n, s, t = sweeps[big]
+        sweeps = [(64, 1, 24, False), (1000, 1, 24, False),
+                  (1000, 2, 24, False), (1000, 4, 24, False),
+                  (10000, 4, 24, False), (10000, 2, 24, False),
+                  (1000, 4, 24, True), (10000, 4, 24, True)]
+    rows = [_serve_scale(n, s, t, sync=sy) for n, s, t, sy in sweeps]
+    # re-run the LARGEST pump config with full-sampling tracing on: the
+    # overhead column is the proof tracing is affordable at scale, and the
+    # traced run writes the Perfetto/Prometheus artifacts next to the CSV
+    big = max((i for i in range(len(sweeps)) if not sweeps[i][3]),
+              key=lambda i: (sweeps[i][0], sweeps[i][1]))
+    n, s, t, _ = sweeps[big]
     traced = _serve_scale(n, s, t, trace=True)
     _tracing_overhead(rows, rows[big], traced)
     rows.append(traced)

@@ -20,7 +20,8 @@ def main() -> None:
                     help="tiny configs (CI smoke lane; overrides --full)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "roofline",
-                             "online", "online_scale", "hotpath"])
+                             "online", "online_scale", "sched_scale",
+                             "hotpath"])
     ap.add_argument("--pallas", action="store_true",
                     help="serve the online benchmark on the Pallas hot path "
                          "(use_pallas=True; compiled on TPU, interpreter "
@@ -44,6 +45,9 @@ def main() -> None:
     if args.only in (None, "online_scale"):
         from benchmarks import online_scale
         online_scale.run(quick=quick, smoke=args.smoke)
+    if args.only in (None, "sched_scale"):
+        from benchmarks import sched_scale
+        sched_scale.run(quick=quick, smoke=args.smoke)
     if args.only in (None, "hotpath"):
         from benchmarks import hotpath
         hotpath.run(quick=quick, smoke=args.smoke)

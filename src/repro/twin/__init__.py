@@ -15,13 +15,23 @@ stream.py     `TelemetryRing` — per-twin fixed-capacity telemetry rings
               samples into the sliding-window batches the trainer consumes
               (`windows`, parity-tested against data/pipeline.make_windows).
 
-scheduler.py  `RefitScheduler` — slot-based refit scheduling mirroring
-              serve/engine.ServeEngine's admission pattern: a fixed pool of
-              FleetMerinda slots, twins admitted / preempted / released by a
-              priority score of staleness + divergence, so thousands of
-              tracked objects share `refit_slots` concurrent recoveries.
-              `SlotFederation` divides a global active-slot budget across
-              per-shard schedulers by aggregate pressure (sharded serving).
+scheduler.py  Slot-based refit scheduling mirroring serve/engine.ServeEngine's
+              admission pattern: a fixed pool of FleetMerinda slots, twins
+              admitted / preempted / released by a priority score of
+              staleness + divergence, so thousands of tracked objects share
+              `refit_slots` concurrent recoveries.  `PackedRefitScheduler`
+              (the serving default) scores the whole fleet in one fused
+              device call over packed arrays (packed.py) and pops only the
+              O(slots) winners through a `PriorityBuckets` queue;
+              `RefitScheduler` is the O(n log n) dict-sorting reference the
+              equivalence tests hold it to.  `SlotFederation` divides a
+              global active-slot budget across per-shard schedulers by
+              aggregate pressure (sharded serving).
+
+packed.py     `PackedFleet` — the packed, row-indexed scheduler-state arrays
+              (samples, deploy watermark, divergence, residency) that the
+              server maintains incrementally and the fused scoring /
+              pressure kernels reduce on device.
 
 sharded.py    `ShardedTwinServer` — N shards, each its own ring + slot pool
               + theta store + scheduler, under one federation: the 10k+
@@ -67,7 +77,9 @@ Sustained latency/throughput tables: benchmarks/online_serving.py
 """
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
                                 GuardInstruments, GuardRotation)
-from repro.twin.scheduler import (FederationConfig, RefitScheduler,
+from repro.twin.packed import PackedFleet, fleet_pressure, fleet_scores
+from repro.twin.scheduler import (FederationConfig, PackedRefitScheduler,
+                                  PriorityBuckets, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
                                   SchedulerMetrics, SlotFederation,
                                   TwinRecord)
@@ -80,8 +92,10 @@ from repro.twin.stream import (RingConfig, StagingBuffer, TelemetryRing,
 __all__ = [
     "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardInstruments",
     "GuardRotation",
-    "FederationConfig", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
+    "FederationConfig", "PackedFleet", "PackedRefitScheduler",
+    "PriorityBuckets", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
     "SchedulerMetrics", "SlotFederation", "TwinRecord",
+    "fleet_pressure", "fleet_scores",
     "TickReport", "TwinServer", "TwinServerConfig",
     "ShardedTickReport", "ShardedTwinConfig", "ShardedTwinServer",
     "RingConfig", "StagingBuffer", "TelemetryRing", "prepare_flush",

@@ -154,6 +154,23 @@ class DivergenceGuard:
         a = self.cfg.ema
         return a * min(float(score), _BLOWUP_SCORE) + (1.0 - a) * prev
 
+    def fold_into(self, div_by_row: np.ndarray, rows: np.ndarray,
+                  scores) -> np.ndarray:
+        """Vectorized `smooth`: EMA-fold raw `scores` into the by-row
+        divergence array IN PLACE at `rows`, returning the updated values.
+
+        `div_by_row` is the packed fleet's divergence column
+        (twin/packed.py), so this single numpy statement is how the guard
+        publishes its view to the scheduler's fused scoring call.  Same
+        float64 arithmetic order as the scalar `smooth`, so the record
+        mirrors stay bit-identical.
+        """
+        a = self.cfg.ema
+        rows = np.asarray(rows)
+        clipped = np.minimum(np.asarray(scores, np.float64), _BLOWUP_SCORE)
+        div_by_row[rows] = a * clipped + (1.0 - a) * div_by_row[rows]
+        return div_by_row[rows]
+
     def judge(self, twin_id: int, score: float, tick: int) -> GuardEvent | None:
         """Threshold an (already smoothed) score into an event, or None."""
         if score > self.cfg.alert_threshold:

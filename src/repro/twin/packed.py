@@ -1,0 +1,219 @@
+"""Packed fleet-state arrays: the scheduler's device-scored data layout.
+
+Up to PR 6 the dict of `TwinRecord`s was the source of truth for everything
+the scheduler reads — samples, deploy watermark, divergence, residency — and
+`RefitScheduler.plan()` re-derived priorities by iterating (and sorting) the
+whole dict in Python every tick.  Fine at 10k twins, fatal at the ROADMAP's
+100k-1M target.
+
+This module flips the layout: **packed, row-indexed numpy arrays are the
+truth** and the record dict is metadata (ids, slot assignments, tick stamps).
+Every mutation point in the server (flush accounting, deploy, guard fold,
+plan application) writes the packed arrays; the scheduler scores the WHOLE
+fleet in one fused, jit-compiled device call (`fleet_scores`) that returns
+only O(slots) winners, the waiting-queue depth, and the federation pressure
+reduction — so per-tick host work is O(budget), not O(twins).
+
+Rows are `TwinRecord.ring_slot` (the TelemetryRing row), so the guard's
+by-row divergence array, the rotation's live set, and the scheduler's score
+arrays all share one indexing scheme.
+
+Precision contract: the device kernel scores in float32 (it only has to
+RANK candidates — `jax.lax.top_k` ties break toward the lower row index);
+the host re-scores the returned O(slots) candidates in float64 with exactly
+the reference planner's arithmetic, so every admission/eviction COMPARISON
+in `PackedRefitScheduler.plan` is bit-identical to `RefitScheduler.plan`.
+The only divergence window is a float32 ranking swap across the top-k
+cutoff between candidates whose float64 priorities differ by less than
+float32 resolution — semantically a coin-flip tie.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PackedFleet", "fleet_scores", "fleet_pressure"]
+
+
+def _pad_capacity(n: int, floor: int = 64) -> int:
+    """Round a row capacity up to a pow2 bucket (bounds jit recompiles when
+    tests/tools build many small fleets; servers pass their exact, fixed
+    `max_twins` and compile once per topology)."""
+    cap = floor
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+class PackedFleet:
+    """Row-indexed scheduler-state arrays for one shard's tracked fleet.
+
+    All arrays have length `capacity` (= the server's `max_twins`); a row is
+    live once `registered[row]` is True.  Sample counters are int32 — the
+    fused call's native dtype, exact in float64 host re-scoring, and good
+    for 8 years of serving at 8 samples/s — so the per-tick device call
+    reads the columns without a conversion pass.  `divergence` (float64) is
+    the guard's exact truth for host re-scoring; `div32` is its float32
+    shadow for the device kernel, written at the same mutation points
+    (guard fold, promote) — `check_mirrors` asserts they never drift.
+
+    Thread-safety matches the server's registry: `register` may be called
+    from ingest threads (the server holds its registration lock and sets
+    `registered` LAST, so a concurrently-planning tick sees either a fully
+    initialized row or an unready one); every other field is written only by
+    the serving thread.
+    """
+
+    __slots__ = ("capacity", "twin_id", "registered", "samples",
+                 "samples_at_deploy", "deployed", "divergence", "div32",
+                 "resident", "residency")
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.twin_id = np.full((capacity,), -1, np.int64)
+        self.registered = np.zeros((capacity,), bool)
+        self.samples = np.zeros((capacity,), np.int32)
+        self.samples_at_deploy = np.zeros((capacity,), np.int32)
+        self.deployed = np.zeros((capacity,), bool)
+        self.divergence = np.zeros((capacity,), np.float64)
+        self.div32 = np.zeros((capacity,), np.float32)
+        self.resident = np.zeros((capacity,), bool)
+        self.residency = np.zeros((capacity,), np.int64)
+
+    def set_divergence(self, rows, values) -> None:
+        """Write divergence truth + its float32 device shadow together —
+        the only sanctioned way to move the divergence column."""
+        self.divergence[rows] = values
+        self.div32[rows] = self.divergence[rows]
+
+    def check_mirrors(self) -> None:
+        """Assert the float32 shadow matches the float64 truth (tests)."""
+        if not np.array_equal(self.div32,
+                              self.divergence.astype(np.float32)):
+            raise AssertionError("div32 shadow drifted from divergence")
+
+    # ------------------------------------------------------------------ #
+    def register(self, row: int, twin_id: int) -> None:
+        """Bind a row to a twin id.  `registered` is set last — see class
+        docstring for the concurrent-plan visibility argument."""
+        self.twin_id[row] = twin_id
+        self.registered[row] = True
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_records(cls, twins: dict, *, capacity: int | None = None
+                     ) -> "PackedFleet":
+        """Build packed arrays from a `TwinRecord` dict (rows =
+        `ring_slot`).  The reference-planner interop path: equivalence
+        tests feed the same record dict to both planners."""
+        max_row = max((r.ring_slot for r in twins.values()), default=-1)
+        cap = (_pad_capacity(max_row + 1) if capacity is None else capacity)
+        if max_row >= cap:
+            raise ValueError(f"ring_slot {max_row} exceeds capacity {cap}")
+        fleet = cls(cap)
+        seen_rows: set[int] = set()
+        for rec in twins.values():
+            if rec.ring_slot in seen_rows:
+                raise ValueError(f"duplicate ring_slot {rec.ring_slot}")
+            seen_rows.add(rec.ring_slot)
+            row = rec.ring_slot
+            fleet.twin_id[row] = rec.twin_id
+            fleet.samples[row] = rec.samples
+            fleet.samples_at_deploy[row] = rec.samples_at_deploy
+            fleet.deployed[row] = rec.deployed
+            fleet.divergence[row] = rec.divergence
+            fleet.div32[row] = fleet.divergence[row]
+            fleet.resident[row] = rec.refit_slot is not None
+            fleet.residency[row] = rec.residency
+            fleet.registered[row] = True
+        return fleet
+
+    def slot_rows_from_records(self, twins: dict, slots: int) -> np.ndarray:
+        """[slots] array of resident ring rows (`capacity` marks an empty
+        slot — the same scratch-row convention as the server's slot ring)."""
+        slot_rows = np.full((slots,), self.capacity, np.int64)
+        for rec in twins.values():
+            if rec.refit_slot is None:
+                continue
+            if not 0 <= rec.refit_slot < slots:
+                raise ValueError(f"refit_slot {rec.refit_slot} out of range")
+            if slot_rows[rec.refit_slot] != self.capacity:
+                raise ValueError(f"slot {rec.refit_slot} doubly occupied")
+            slot_rows[rec.refit_slot] = rec.ring_slot
+        return slot_rows
+
+
+# --------------------------------------------------------------------------- #
+# the fused scoring kernel: one jit-compiled call over the whole fleet
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("k",))
+def _fleet_scores(samples, at_deploy, deployed, divergence, resident,
+                  registered, min_samples, sw, dw, k: int):
+    """Score every row and reduce to what the host actually needs.
+
+        priority = sw * (staleness + never_deployed) + dw * divergence
+        staleness = (samples - samples_at_deploy) / max(min_samples, 1)
+
+    Returns (cand_rows [k], cand_prio [k], n_waiting [], pressure []):
+    the top-k READY, UNSLOTTED rows by priority (ties toward the lower row
+    index — `lax.top_k` is stable), the waiting-queue depth, and the summed
+    priority over all ready rows (the federation pressure signal).  k =
+    the slot-pool size is sufficient for exact planning: one tick can
+    admit at most `slots` twins (fill + evict combined), so every waiting
+    twin the reference planner could touch is inside the top-k.
+    """
+    stale = (samples - at_deploy).astype(jnp.float32) / jnp.maximum(
+        min_samples, 1).astype(jnp.float32)
+    stale = stale + jnp.where(deployed, 0.0, 1.0)
+    prio = sw * stale + dw * divergence
+    ready = registered & (samples >= min_samples)
+    pressure = jnp.sum(jnp.where(ready, prio, 0.0))
+    waiting = ready & ~resident
+    n_waiting = jnp.sum(waiting)
+    cand_prio, cand_rows = jax.lax.top_k(
+        jnp.where(waiting, prio, -jnp.inf), k)
+    return cand_rows, cand_prio, n_waiting, pressure
+
+
+def _device_operands(fleet: PackedFleet):
+    # zero-copy: every column is already in the kernel's dtype (int32
+    # counters, float32 divergence shadow) — no O(n) conversion pass on the
+    # serving tick's hot path
+    return (fleet.samples, fleet.samples_at_deploy, fleet.deployed,
+            fleet.div32, fleet.resident, fleet.registered)
+
+
+def fleet_scores(fleet: PackedFleet, *, min_samples: int, sw: float,
+                 dw: float, k: int):
+    """Host wrapper: returns (cand_rows, cand_prio, n_waiting, pressure)
+    as numpy/python values.  Rows whose cand_prio is -inf are padding
+    (fewer than k twins waiting) — callers must drop them."""
+    k = max(1, min(k, fleet.capacity))
+    cand_rows, cand_prio, n_waiting, pressure = _fleet_scores(
+        *_device_operands(fleet), np.int32(min_samples), np.float32(sw),
+        np.float32(dw), k)
+    return (np.asarray(cand_rows), np.asarray(cand_prio),
+            int(n_waiting), float(pressure))
+
+
+@jax.jit
+def _fleet_pressure(samples, at_deploy, deployed, divergence, resident,
+                    registered, min_samples, sw, dw):
+    stale = (samples - at_deploy).astype(jnp.float32) / jnp.maximum(
+        min_samples, 1).astype(jnp.float32)
+    stale = stale + jnp.where(deployed, 0.0, 1.0)
+    prio = sw * stale + dw * divergence
+    ready = registered & (samples >= min_samples)
+    return jnp.sum(jnp.where(ready, prio, 0.0))
+
+
+def fleet_pressure(fleet: PackedFleet, *, min_samples: int, sw: float,
+                   dw: float) -> float:
+    """Aggregate refit demand as one fused device reduction — the number
+    `SlotFederation.rebalance` consumes, without an O(twins) host scan."""
+    return float(_fleet_pressure(
+        *_device_operands(fleet), np.int32(min_samples), np.float32(sw),
+        np.float32(dw)))

@@ -36,13 +36,33 @@ budget across shards in proportion to their aggregate staleness+divergence
 shedding surplus residents (lowest priority first) when the grant shrinks.
 Physical slot pools stay fixed-shape (no recompiles); only the number of
 slots a shard may FILL moves.
+
+Two planners implement the SAME admission semantics:
+
+  * `RefitScheduler` — the reference: iterates and sorts the whole
+    `TwinRecord` dict per tick, O(n log n) host cost.  Retained as the
+    equivalence oracle (tests/test_scheduler_equivalence.py) and for tiny
+    fleets.
+  * `PackedRefitScheduler` — the default (twin/server.py): scores the whole
+    fleet in ONE fused jit-compiled device call over packed staleness /
+    divergence arrays (twin/packed.py), pops the O(slots) winners through a
+    `PriorityBuckets` queue, and leaves the host O(budget + log n) work per
+    tick.  The 100k-twin planner.
 """
 from __future__ import annotations
 
+import heapq
+import math
+import time
 from dataclasses import dataclass, field
 
+import numpy as np
+
+from repro.twin.packed import PackedFleet, fleet_pressure, fleet_scores
+
 __all__ = ["TwinRecord", "SchedulerConfig", "SchedulePlan", "SchedulerMetrics",
-           "RefitScheduler", "FederationConfig", "SlotFederation"]
+           "PriorityBuckets", "RefitScheduler", "PackedRefitScheduler",
+           "FederationConfig", "SlotFederation"]
 
 
 @dataclass
@@ -87,12 +107,19 @@ class SchedulerMetrics:
     `admitted`/`evicted`/`released` count slot transitions cumulatively;
     `pressure` is the latest aggregate staleness+divergence demand — the
     same number the federation rebalances on, so a fleet dashboard shows
-    WHY grants moved.
+    WHY grants moved.  `plan_seconds` is the pure planning cost (scoring +
+    winner pops, excluding the server's slot-reset applies) — the scale
+    benchmark's flatness evidence; `waiting` gauges the ready-but-unslotted
+    backlog the planner draws from; `queue_entries` the candidate entries
+    retained in the bucketed queue after a plan.
     """
     admitted: object            # Counter-like: .inc(n)
     evicted: object
     released: object
     pressure: object            # Gauge-like: .set(v)
+    plan_seconds: object        # Histogram-like: .observe(s)
+    waiting: object             # Gauge: ready twins without a slot
+    queue_entries: object       # Gauge: live bucket-queue entries
 
     @staticmethod
     def create(registry, labels: dict | None = None) -> "SchedulerMetrics":
@@ -111,7 +138,121 @@ class SchedulerMetrics:
             pressure=registry.gauge(
                 "twin_sched_pressure",
                 help="aggregate staleness+divergence refit demand "
-                     "(federation rebalance signal)", labels=labels))
+                     "(federation rebalance signal)", labels=labels),
+            plan_seconds=registry.histogram(
+                "twin_sched_plan_seconds",
+                help="schedule-planning wall latency per tick (scoring + "
+                     "winner selection, excluding slot-reset application)",
+                unit="seconds", labels=labels),
+            waiting=registry.gauge(
+                "twin_sched_waiting",
+                help="ready twins waiting for a refit slot (planner queue "
+                     "depth)", labels=labels),
+            queue_entries=registry.gauge(
+                "twin_sched_queue_entries",
+                help="live candidate entries held by the bucketed priority "
+                     "queue after planning", labels=labels))
+
+
+# --------------------------------------------------------------------------- #
+# PriorityBuckets: quantized-priority queue with lazy deletion
+# --------------------------------------------------------------------------- #
+class PriorityBuckets:
+    """Bucketed max-priority queue: O(1) push/discard, cheap ordered pops.
+
+    Priorities are quantized to `quantum`-wide buckets (level =
+    floor(priority / quantum)); a lazy max-heap tracks non-empty levels, and
+    entries are lazily deleted — `discard`/re-`push` just version-bumps the
+    key, and stale bucket entries are skipped (and pruned) when a pop
+    reaches their bucket.  The same live-set discipline as
+    `GuardRotation`'s eligible-row array: mutation points pay O(1) and the
+    consumer pays for exactly what it touches.
+
+    Ordering contract: pops come out in EXACT (-priority, key) order, not
+    merely bucket order — quantization is monotone, so cross-bucket order is
+    exact for free, and within the one bucket a pop touches, live entries
+    are compared exactly.  Cost per pop is O(touched-bucket size +
+    log #levels); with `quantum` sized so a bucket holds O(budget) entries,
+    a planning pass of B pops costs O(B + log n) — the bound that replaces
+    the reference planner's O(n log n) full sorts.
+    """
+
+    __slots__ = ("quantum", "_buckets", "_levels", "_live", "_version")
+
+    def __init__(self, quantum: float = 0.25):
+        if not quantum > 0:
+            raise ValueError("bucket quantum must be > 0")
+        self.quantum = quantum
+        self._buckets: dict[int, list] = {}   # level -> [(key, prio, payload, ver)]
+        self._levels: list[int] = []          # negated levels (max-heap)
+        self._live: dict = {}                 # key -> (prio, level, ver)
+        self._version = 0
+
+    def _level(self, prio: float) -> int:
+        if not math.isfinite(prio):
+            raise ValueError(f"priority must be finite, got {prio}")
+        return int(math.floor(prio / self.quantum))
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    @property
+    def stale_entries(self) -> int:
+        """Lazily-deleted entries still occupying buckets (pruned on pop)."""
+        return sum(len(b) for b in self._buckets.values()) - len(self._live)
+
+    def clear(self) -> None:
+        self._buckets.clear()
+        self._levels.clear()
+        self._live.clear()
+
+    def push(self, key, prio: float, payload=None) -> None:
+        """Insert or reprioritize `key` (old entry is lazily deleted)."""
+        level = self._level(prio)
+        self._version += 1
+        self._live[key] = (prio, level, self._version)
+        bucket = self._buckets.get(level)
+        if bucket is None:
+            bucket = self._buckets[level] = []
+            heapq.heappush(self._levels, -level)
+        bucket.append((key, prio, payload, self._version))
+
+    def discard(self, key) -> None:
+        """Lazily delete `key` (no-op if absent)."""
+        self._live.pop(key, None)
+
+    def _top_bucket(self):
+        """Highest level with a live entry, with its bucket pruned to live
+        entries only; None when empty."""
+        while self._levels:
+            level = -self._levels[0]
+            bucket = self._buckets.get(level, ())
+            live = [e for e in bucket
+                    if self._live.get(e[0], (None, None, -1))[2] == e[3]]
+            if live:
+                self._buckets[level] = live
+                return live
+            heapq.heappop(self._levels)
+            self._buckets.pop(level, None)
+        return None
+
+    def peek(self):
+        """Best live (key, prio, payload) by (-prio, key), or None."""
+        bucket = self._top_bucket()
+        if bucket is None:
+            return None
+        key, prio, payload, _ = min(bucket, key=lambda e: (-e[1], e[0]))
+        return key, prio, payload
+
+    def pop(self):
+        """Remove and return the best live (key, prio, payload), or None."""
+        bucket = self._top_bucket()
+        if bucket is None:
+            return None
+        best = min(bucket, key=lambda e: (-e[1], e[0]))
+        bucket.remove(best)
+        del self._live[best[0]]
+        return best[0], best[1], best[2]
 
 
 class RefitScheduler:
@@ -154,14 +295,16 @@ class RefitScheduler:
         Units: residency thresholds (`min_residency`, `max_residency`) are
         serving TICKS, not seconds or train steps; `min_samples` is ring
         telemetry samples.  Host cost is O(n log n) in the number of
-        tracked twins (two sorts per tick — the known 100k-twin scaling
-        limit, see ROADMAP).  Not thread-safe by itself; the server passes
+        tracked twins (two sorts per tick) — the reason
+        `PackedRefitScheduler` is the serving default; this planner is the
+        semantics oracle.  Not thread-safe by itself; the server passes
         a `twin_snapshot()` registry copy so concurrent `ingest`
         registrations cannot race the iteration.
 
         Iteration is in twin_id order so equal-priority decisions are
         deterministic across runs.
         """
+        t0 = time.perf_counter()
         cfg = self.cfg
         cap = (cfg.slots if max_active is None
                else max(0, min(cfg.slots, max_active)))
@@ -172,6 +315,7 @@ class RefitScheduler:
         waiting = sorted((r for r in twins.values()
                           if r.refit_slot is None and self.ready(r)),
                          key=lambda r: (-self.priority(r), r.twin_id))
+        n_waiting = len(waiting)
 
         # federation revoke: the grant shrank below occupancy — shed the
         # lowest-priority residents until the shard fits its grant
@@ -238,6 +382,199 @@ class RefitScheduler:
                 self.metrics.evicted.inc(len(plan.evict))
             if plan.release:
                 self.metrics.released.inc(len(plan.release))
+            self.metrics.waiting.set(n_waiting)
+            self.metrics.plan_seconds.observe(time.perf_counter() - t0)
+        return plan
+
+
+# --------------------------------------------------------------------------- #
+# PackedRefitScheduler: device-fused scoring + O(budget + log n) host pops
+# --------------------------------------------------------------------------- #
+class PackedRefitScheduler:
+    """The 100k-twin planner: same admission semantics as `RefitScheduler`,
+    different cost model.
+
+    Per tick it makes ONE fused jit call over the shard's `PackedFleet`
+    arrays (`packed.fleet_scores`) which returns the top-`slots` waiting
+    candidates, the waiting-queue depth, and the pressure reduction.  That
+    top-k is provably sufficient for exact planning: a tick can consume at
+    most `cap - len(kept)` waiting twins in the fill phase plus `len(kept)`
+    in the eviction phase, and their sum is bounded by `cap <= slots`.  The
+    host then re-scores the O(slots) candidates and residents in float64
+    with the reference planner's exact arithmetic (see twin/packed.py's
+    precision contract), orders candidates through a `PriorityBuckets`
+    queue keyed by twin_id, and replays the reference algorithm
+    step-for-step — so `plan()` returns byte-identical
+    admit/evict/release sets (tests/test_scheduler_equivalence.py holds the
+    two planners to that on random fleets).
+
+    Host cost per tick: O(slots log slots + log n) plus the O(n) work that
+    runs VECTORIZED on the device — vs the reference's O(n log n) in
+    Python.  State: stateless between ticks (staleness drifts every tick
+    for every waiting twin, so any incrementally-maintained host ordering
+    would need Omega(n) updates per tick anyway — the fused device pass IS
+    the incremental structure).
+    """
+
+    def __init__(self, cfg: SchedulerConfig,
+                 metrics: SchedulerMetrics | None = None, *,
+                 quantum: float = 0.25):
+        self.cfg = cfg
+        self.metrics = metrics
+        self.queue = PriorityBuckets(quantum)
+        self.last_pressure = 0.0
+        self.last_waiting = 0
+
+    # ------------------------------------------------------------------ #
+    def _priority_rows(self, fleet: PackedFleet, rows: np.ndarray
+                       ) -> np.ndarray:
+        """Exact float64 re-score of `rows` — the same IEEE operation order
+        as `RefitScheduler.priority`, so comparisons are bit-identical."""
+        cfg = self.cfg
+        rows = np.asarray(rows, np.int64)
+        stale = ((fleet.samples[rows] - fleet.samples_at_deploy[rows])
+                 / max(cfg.min_samples, 1))
+        stale = stale + np.where(fleet.deployed[rows], 0.0, 1.0)
+        return (cfg.staleness_weight * stale
+                + cfg.divergence_weight * fleet.divergence[rows])
+
+    def pressure(self, fleet: PackedFleet) -> float:
+        """Aggregate refit demand via the fused device reduction (see
+        `RefitScheduler.pressure` for the definition)."""
+        cfg = self.cfg
+        p = fleet_pressure(fleet, min_samples=cfg.min_samples,
+                           sw=cfg.staleness_weight,
+                           dw=cfg.divergence_weight)
+        self.last_pressure = p
+        if self.metrics is not None:
+            self.metrics.pressure.set(p)
+        return p
+
+    # ------------------------------------------------------------------ #
+    def plan_records(self, twins: dict[int, TwinRecord],
+                     max_active: int | None = None) -> SchedulePlan:
+        """Reference-interop entry: plan from a `TwinRecord` dict by packing
+        it first.  Used by the equivalence tests and tools; the server calls
+        `plan()` directly on its incrementally-maintained fleet."""
+        fleet = PackedFleet.from_records(twins)
+        slot_rows = fleet.slot_rows_from_records(twins, self.cfg.slots)
+        return self.plan(fleet, slot_rows, max_active=max_active)
+
+    def plan(self, fleet: PackedFleet, slot_rows: np.ndarray,
+             max_active: int | None = None) -> SchedulePlan:
+        """Decide this tick's slot turnover from packed fleet state.
+
+        `slot_rows[slot]` is the resident ring row, with values outside
+        [0, fleet.capacity) marking an empty slot (the server's scratch-row
+        convention).  Pure: mutates neither the fleet nor `slot_rows`; the
+        server applies the plan.  Same `max_active` grant semantics as the
+        reference planner.
+        """
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        cap = (cfg.slots if max_active is None
+               else max(0, min(cfg.slots, max_active)))
+        plan = SchedulePlan()
+
+        slot_rows = np.asarray(slot_rows)
+        occupied = ((slot_rows >= 0) & (slot_rows < fleet.capacity))
+
+        # ONE device pass: top-k waiting candidates + queue depth + pressure
+        cand_rows, cand_prio32, n_waiting, pressure = fleet_scores(
+            fleet, min_samples=cfg.min_samples, sw=cfg.staleness_weight,
+            dw=cfg.divergence_weight, k=cfg.slots)
+        self.last_pressure = pressure
+        self.last_waiting = n_waiting
+        keep = np.isfinite(cand_prio32)
+        cand_rows = cand_rows[keep]
+
+        # exact float64 re-score of the O(slots) rows the plan can touch
+        queue = self.queue
+        queue.clear()
+        if cand_rows.size:
+            cand_prio = self._priority_rows(fleet, cand_rows)
+            cand_ids = fleet.twin_id[cand_rows]
+            for tid, prio in zip(cand_ids.tolist(), cand_prio.tolist()):
+                queue.push(int(tid), prio)
+
+        # residents as (twin_id, slot, priority, residency, healthy, stuck),
+        # iterated in twin_id order like the reference
+        residents = []
+        res_rows = slot_rows[occupied]
+        if res_rows.size:
+            res_slots = np.nonzero(occupied)[0]
+            res_prio = self._priority_rows(fleet, res_rows)
+            res_ids = fleet.twin_id[res_rows]
+            healthy = (fleet.deployed[res_rows]
+                       & (fleet.divergence[res_rows]
+                          < cfg.release_divergence))
+            res_cnt = fleet.residency[res_rows]
+            residents = sorted(
+                zip(res_ids.tolist(), res_slots.tolist(), res_prio.tolist(),
+                    res_cnt.tolist(), healthy.tolist()))
+
+        # federation revoke: shed lowest-priority residents to fit the grant
+        if len(residents) > cap:
+            shed = sorted(residents, key=lambda r: (r[2], r[0]))
+            shed_ids = {r[0] for r in shed[:len(residents) - cap]}
+            plan.release.extend(sorted(shed_ids))
+            residents = [r for r in residents if r[0] not in shed_ids]
+
+        # voluntary release (converged+healthy, or stuck) — but only for
+        # waiting twins the grant-usable free slots cannot absorb
+        free = sorted(set(range(cfg.slots))
+                      - {slot for _, slot, *_ in residents})
+        kept = []
+        usable_free = min(len(free), cap - len(residents))
+        releasable = n_waiting - usable_free
+        voluntary = 0
+        for tid, slot, prio, residency, healthy in residents:
+            stuck = residency >= 2 * cfg.max_residency
+            if (voluntary < releasable
+                    and ((residency >= cfg.max_residency and healthy)
+                         or stuck)):
+                plan.release.append(tid)
+                voluntary += 1
+                free.append(slot)
+            else:
+                kept.append((tid, slot, prio, residency))
+
+        # fill free slots with the best waiting twins, up to the grant
+        free.sort()
+        budget = cap - len(kept)
+        for slot in free:
+            if budget <= 0 or not len(queue):
+                break
+            tid, _, _ = queue.pop()
+            plan.admit.append((slot, tid))
+            budget -= 1
+
+        # preemption: strongest challengers vs weakest eligible residents
+        evictable = sorted((r for r in kept
+                            if r[3] >= cfg.min_residency),
+                           key=lambda r: (r[2], r[0]))
+        for tid, slot, prio, _ in evictable:
+            top = queue.peek()
+            if top is None:
+                break
+            if top[1] > prio + cfg.evict_margin:
+                queue.pop()
+                plan.evict.append(tid)
+                plan.admit.append((slot, top[0]))
+            else:
+                break   # residents below this one are even harder to beat
+
+        if self.metrics is not None:
+            if plan.admit:
+                self.metrics.admitted.inc(len(plan.admit))
+            if plan.evict:
+                self.metrics.evicted.inc(len(plan.evict))
+            if plan.release:
+                self.metrics.released.inc(len(plan.release))
+            self.metrics.pressure.set(pressure)
+            self.metrics.waiting.set(n_waiting)
+            self.metrics.queue_entries.set(len(queue))
+            self.metrics.plan_seconds.observe(time.perf_counter() - t0)
         return plan
 
 

@@ -14,9 +14,12 @@ One `tick()` is a full serving cycle over the whole tracked fleet:
                 rotating subset per tick (round-robin + divergence carry-over)
                 so guard cost is O(budget), not O(twins),
     3. SCHEDULE admit/evict/release twins over the bounded refit-slot pool
-                by staleness + divergence priority (twin/scheduler.py); a
-                federation layer (twin/sharded.py) can cap the active pool
-                via `set_active_slots`,
+                by staleness + divergence priority (twin/scheduler.py).
+                The default `PackedRefitScheduler` scores the WHOLE fleet in
+                one fused device call over packed arrays (twin/packed.py)
+                and pops only the O(slots) winners on the host; a federation
+                layer (twin/sharded.py) can cap the active pool via
+                `set_active_slots`,
     4. REFIT    `steps_per_tick` fused FleetMerinda.train_step calls over all
                 slots at once (the bounded compute budget),
     5. DEPLOY   recover_all on slots whose twin has trained past
@@ -59,8 +62,10 @@ from repro.kernels.rk4.ops import rk4_poly_solve
 from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
                                 GuardInstruments, GuardRotation)
-from repro.twin.scheduler import (RefitScheduler, SchedulerConfig,
-                                  SchedulePlan, SchedulerMetrics, TwinRecord)
+from repro.twin.packed import PackedFleet
+from repro.twin.scheduler import (PackedRefitScheduler, RefitScheduler,
+                                  SchedulerConfig, SchedulePlan,
+                                  SchedulerMetrics, TwinRecord)
 from repro.twin.stream import (FlushBatch, RingConfig, StagingBuffer,
                                TelemetryRing, prepare_flush)
 
@@ -104,6 +109,9 @@ class TwinServerConfig:
     min_residency: int = 8
     max_residency: int = 64
     release_divergence: float = 0.05
+    scheduler: str = "bucketed"       # "bucketed": PackedRefitScheduler
+                                      # (device-fused scoring); "reference":
+                                      # the O(n log n) dict-sorting oracle
     flush_pad: int = 8                # chunk-length quantum (bounds retraces)
     seed: int = 0
 
@@ -175,14 +183,29 @@ class TwinServer:
         self._key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         self._fstate = self.fleet.init(self._split())
 
-        self.scheduler = RefitScheduler(SchedulerConfig(
+        sched_cfg = SchedulerConfig(
             slots=cfg.refit_slots, min_samples=self.min_samples,
             staleness_weight=cfg.staleness_weight,
             divergence_weight=cfg.divergence_weight,
             evict_margin=cfg.evict_margin, min_residency=cfg.min_residency,
             max_residency=cfg.max_residency,
-            release_divergence=cfg.release_divergence),
-            metrics=SchedulerMetrics.create(self.metrics, self._labels))
+            release_divergence=cfg.release_divergence)
+        sched_metrics = SchedulerMetrics.create(self.metrics, self._labels)
+        if cfg.scheduler == "bucketed":
+            self.scheduler = PackedRefitScheduler(sched_cfg,
+                                                  metrics=sched_metrics)
+        elif cfg.scheduler == "reference":
+            self.scheduler = RefitScheduler(sched_cfg, metrics=sched_metrics)
+        else:
+            raise ValueError(f"unknown scheduler {cfg.scheduler!r} "
+                             "(expected 'bucketed' or 'reference')")
+        # packed-arrays-as-truth scheduler state (twin/packed.py): every
+        # mutation point below (flush accounting, deploy, guard fold, plan
+        # apply, refit residency) writes BOTH the record and its packed row,
+        # so the fused scoring call never rebuilds from the dict.  The
+        # record dict stays the metadata mirror (ids, slots, tick stamps)
+        # that tests/examples and the reference planner read.
+        self.packed = PackedFleet(cfg.max_twins)
         self._max_active: int | None = None   # federation cap (None: all)
 
         self._rotation = (None if cfg.guard_budget is None else
@@ -197,12 +220,14 @@ class TwinServer:
         # INCREMENTALLY at deploy/flush time: the guard must not rescan all
         # 10k records per tick, or its cost is O(twins) again on the host
         # side no matter how small the fused budget is.  _div mirrors each
-        # record's EMA score by ring row (numpy, for the rotation's
-        # vectorized carry-over scan); _live_rows caches the sorted row
-        # array, rebuilt only when membership changes.
+        # record's EMA score by ring row (the rotation's vectorized
+        # carry-over scan reads it); since the packed-fleet refactor _div IS
+        # the fleet's divergence column (same array object), so guard folds
+        # feed the scheduler's fused scoring with no extra copy.  _live_rows
+        # caches the sorted row array, rebuilt only when membership changes.
         self._guard_live: dict[int, TwinRecord] = {}  # ring row -> record
         self._guard_min = cfg.guard.window + 1
-        self._div = np.zeros((cfg.max_twins,), np.float64)
+        self._div = self.packed.divergence
         self._live_rows = np.empty((0,), np.int64)
         self._live_dirty = False
         self._reg_lock = threading.Lock()             # async ingest registers
@@ -297,6 +322,7 @@ class TwinServer:
             self.twins[twin_id] = rec
             self._row2rec[row] = rec
             self._guard_state[twin_id] = "OK"
+            self.packed.register(row, twin_id)
             return rec
 
     def twin_snapshot(self) -> dict[int, TwinRecord]:
@@ -308,7 +334,7 @@ class TwinServer:
         """Admit a record to the guard-eligible set (idempotent)."""
         if rec.ring_slot not in self._guard_live:
             self._guard_live[rec.ring_slot] = rec
-            self._div[rec.ring_slot] = rec.divergence
+            self.packed.set_divergence(rec.ring_slot, rec.divergence)
             self._live_dirty = True
 
     # ------------------------------------------------------------------ #
@@ -363,6 +389,7 @@ class TwinServer:
         for row, raw in batch.received.items():
             rec = self._row2rec[row]
             rec.samples += raw
+            self.packed.samples[row] = rec.samples
             if rec.deployed and rec.samples >= self._guard_min:
                 self._guard_add(rec)
         self._rstate = self.ring.ingest(
@@ -418,6 +445,15 @@ class TwinServer:
         return (self.cfg.refit_slots if self._max_active is None
                 else max(0, min(self.cfg.refit_slots, self._max_active)))
 
+    def refit_pressure(self) -> float:
+        """Aggregate staleness+divergence refit demand — the federation's
+        rebalance signal.  Bucketed scheduler: one fused device reduction
+        over the packed arrays; reference scheduler: the O(twins) host scan
+        over a registry snapshot."""
+        if isinstance(self.scheduler, PackedRefitScheduler):
+            return self.scheduler.pressure(self.packed)
+        return self.scheduler.pressure(self.twin_snapshot())
+
     # ------------------------------------------------------------------ #
     def deploy(self, twin_id: int, theta) -> None:
         """Install a theta for `twin_id` directly (warm start from an offline
@@ -426,6 +462,7 @@ class TwinServer:
         self._theta = self._theta.at[rec.ring_slot].set(jnp.asarray(theta))
         self._mark_deployed(rec)
         rec.samples_at_deploy = rec.samples
+        self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
         rec.deploy_tick = self.tick_count
         if rec.samples >= self._guard_min:
             self._guard_add(rec)
@@ -449,6 +486,7 @@ class TwinServer:
         for rec in recs:
             self._mark_deployed(rec)
             rec.samples_at_deploy = rec.samples
+            self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
             rec.deploy_tick = self.tick_count
             if rec.samples >= self._guard_min:
                 self._guard_add(rec)
@@ -456,6 +494,7 @@ class TwinServer:
     def _mark_deployed(self, rec: TwinRecord) -> None:
         if not rec.deployed:
             rec.deployed = True
+            self.packed.deployed[rec.ring_slot] = True
             self._n_deployed += 1
 
     # ------------------------------------------------------------------ #
@@ -469,7 +508,10 @@ class TwinServer:
             rows = jnp.arange(self.cfg.max_twins)
             ys, us = self.ring.latest(self._rstate, rows, gw)
             scores = np.asarray(self.guard.score(self._theta[:-1], ys, us))
-            scored = [(rec, scores[row]) for row, rec in live.items()]
+            recs = list(live.values())
+            srows = np.fromiter((r.ring_slot for r in recs), np.int64,
+                                count=len(recs))
+            raw = scores[srows]
         else:
             # budgeted rotation: fixed-size fused call (O(budget))
             if self._live_dirty:
@@ -483,14 +525,19 @@ class TwinServer:
             rows = jnp.asarray(rows_np)
             ys, us = self.ring.latest(self._rstate, rows, gw)
             scores = np.asarray(self.guard.score(self._theta[rows], ys, us))
-            scored = [(live[int(row)], scores[i])
-                      for i, row in enumerate(pick)]
+            recs = [live[int(row)] for row in pick]
+            srows = np.asarray(pick, np.int64)
+            raw = scores[:len(recs)]
+        # one vectorized EMA fold publishes the smoothed scores into the
+        # packed divergence column (_div IS packed.divergence); the record
+        # fields are mirrors of the same values
+        smoothed = self.guard.fold_into(self._div, srows, raw)
+        self.packed.div32[srows] = smoothed   # float32 shadow for the kernel
         events: list[GuardEvent] = []
         score_hist = self._guard_obs.score
-        for rec, score in scored:
+        for rec, score, div in zip(recs, raw, smoothed):
             score_hist.observe(float(score))
-            rec.divergence = self.guard.smooth(rec.divergence, score)
-            self._div[rec.ring_slot] = rec.divergence
+            rec.divergence = float(div)
             ev = self.guard.judge(rec.twin_id, rec.divergence, self.tick_count)
             kind = ev.kind if ev else "OK"
             if kind != self._guard_state[rec.twin_id]:
@@ -499,8 +546,8 @@ class TwinServer:
                     events.append(ev)
                     self._guard_obs.events[ev.kind].inc()
         self.events.extend(events)
-        self._guard_obs.scored.inc(len(scored))
-        return events, len(scored)
+        self._guard_obs.scored.inc(len(recs))
+        return events, len(recs)
 
     # ------------------------------------------------------------------ #
     def _slot_windows(self):
@@ -509,12 +556,15 @@ class TwinServer:
                                  stride=self.cfg.stride, length=self.span)
 
     def _apply_plan(self, plan: SchedulePlan) -> None:
+        packed = self.packed
         for tid in plan.evict + plan.release:
             rec = self.twins[tid]
             self._slot_ring[rec.refit_slot] = self._scratch
             self._slot_twin.pop(rec.refit_slot, None)
             rec.refit_slot = None
             rec.residency = rec.steps_in_slot = 0
+            packed.resident[rec.ring_slot] = False
+            packed.residency[rec.ring_slot] = 0
         for slot, tid in plan.admit:
             rec = self.twins[tid]
             y_w, u_w = self.ring.windows(
@@ -526,6 +576,8 @@ class TwinServer:
             rec.refit_slot = slot
             rec.admitted_tick = self.tick_count
             rec.residency = rec.steps_in_slot = 0
+            packed.resident[rec.ring_slot] = True
+            packed.residency[rec.ring_slot] = 0
             self._slot_ring[slot] = rec.ring_slot
             self._slot_twin[slot] = tid
 
@@ -545,6 +597,7 @@ class TwinServer:
             rec = self.twins[tid]
             rec.steps_in_slot += self.cfg.steps_per_tick
             rec.residency += 1
+            self.packed.residency[rec.ring_slot] = rec.residency
             if rec.steps_in_slot >= self.cfg.deploy_after:
                 deployable.append(slot)
         if deployable:
@@ -583,15 +636,17 @@ class TwinServer:
                 # count this as a completed review so the twin's staleness
                 # resets and it stops hogging a refit slot.
                 rec.samples_at_deploy = rec.samples
+                self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
         if promoted:
             self._theta = self._theta.at[jnp.asarray(targets)].set(thetas)
         for slot in promoted:
             rec = self.twins[self._slot_twin[slot]]
             self._mark_deployed(rec)
             rec.samples_at_deploy = rec.samples
+            self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
             rec.deploy_tick = self.tick_count
             rec.divergence = float(min(cand[slot], 1e6))
-            self._div[rec.ring_slot] = rec.divergence
+            self.packed.set_divergence(rec.ring_slot, rec.divergence)
             if rec.samples >= self._guard_min:
                 self._guard_add(rec)
 
@@ -627,11 +682,19 @@ class TwinServer:
             with span("guard"):
                 events, n_guarded = self._update_divergence()
             t2 = time.perf_counter()
-            # snapshot the registry: async ingest threads may register new
-            # twins mid-tick, and dict iteration must not race those inserts
+            # bucketed path: plan straight off the packed arrays (a twin
+            # registered mid-plan is visible only once `registered` flips,
+            # and with 0 samples it cannot be ready — no snapshot needed).
+            # reference path: snapshot the registry, since async ingest
+            # threads may register new twins mid-tick and dict iteration
+            # must not race those inserts.
             with span("schedule"):
-                plan = self.scheduler.plan(self.twin_snapshot(),
-                                           max_active=self._max_active)
+                if isinstance(self.scheduler, PackedRefitScheduler):
+                    plan = self.scheduler.plan(self.packed, self._slot_ring,
+                                               max_active=self._max_active)
+                else:
+                    plan = self.scheduler.plan(self.twin_snapshot(),
+                                               max_active=self._max_active)
                 self._apply_plan(plan)
             t3 = time.perf_counter()
             with span("refit"):

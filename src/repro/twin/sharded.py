@@ -8,7 +8,9 @@ module partitions the tracked fleet across N SHARDS — each shard owns its own
 
   * **Slot federation** (`SlotFederation`, twin/scheduler.py): a GLOBAL
     active-refit budget is divided across shards in proportion to their
-    aggregate staleness+divergence pressure, re-evaluated every
+    aggregate staleness+divergence pressure (each shard's
+    `refit_pressure()` — one fused device reduction over its packed fleet
+    arrays, not an O(twins) host scan), re-evaluated every
     `rebalance_every` ticks.  A shard whose twins diverge (dynamics changed,
     models stale) is granted slots that quiet shards give back — refit
     compute follows the emergency.  Physical pools never change shape, so
@@ -210,8 +212,7 @@ class ShardedTwinServer:
             if self.tick_count % self.cfg.rebalance_every == 0:
                 with self.tracer.span("rebalance"):
                     self.grants = self.federation.rebalance(
-                        [srv.scheduler.pressure(srv.twin_snapshot())
-                         for srv in self.shards])
+                        [srv.refit_pressure() for srv in self.shards])
                     for srv, g, gauge in zip(self.shards, self.grants,
                                              self._m_grants):
                         srv.set_active_slots(g)

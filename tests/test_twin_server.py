@@ -8,23 +8,41 @@ from repro.core.merinda import MerindaConfig
 from repro.systems.lotka_volterra import LotkaVolterra
 from repro.systems.simulate import simulate_batch
 from repro.twin.monitor import DivergenceGuard, GuardConfig
-from repro.twin.scheduler import RefitScheduler, SchedulerConfig, TwinRecord
+from repro.twin.scheduler import (PackedRefitScheduler, RefitScheduler,
+                                  SchedulerConfig, TwinRecord)
 from repro.twin.server import TwinServer, TwinServerConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
 
 # --------------------------------------------------------------------- #
-# scheduler policy (pure host logic, no JAX)
+# scheduler policy — every test runs against BOTH planners (the reference
+# dict-sorting oracle and the packed device-scored default), since they
+# promise identical admission semantics
 # --------------------------------------------------------------------- #
-def _sched(**kw):
-    d = dict(slots=2, min_samples=10, min_residency=2, max_residency=8,
-             evict_margin=0.5)
-    d.update(kw)
-    return RefitScheduler(SchedulerConfig(**d))
+class _PackedPlanAdapter:
+    """Give `PackedRefitScheduler` the reference's dict-based plan() shape."""
+
+    def __init__(self, cfg):
+        self._s = PackedRefitScheduler(cfg)
+
+    def plan(self, twins, max_active=None):
+        return self._s.plan_records(twins, max_active=max_active)
 
 
-def test_scheduler_fills_free_slots_by_priority():
+@pytest.fixture(params=["reference", "bucketed"])
+def _sched(request):
+    def build(**kw):
+        d = dict(slots=2, min_samples=10, min_residency=2, max_residency=8,
+                 evict_margin=0.5)
+        d.update(kw)
+        cfg = SchedulerConfig(**d)
+        return (RefitScheduler(cfg) if request.param == "reference"
+                else _PackedPlanAdapter(cfg))
+    return build
+
+
+def test_scheduler_fills_free_slots_by_priority(_sched):
     s = _sched()
     twins = {i: TwinRecord(twin_id=i, ring_slot=i, samples=10 + i)
              for i in range(4)}
@@ -34,13 +52,13 @@ def test_scheduler_fills_free_slots_by_priority():
     assert len(plan.admit) == 2 and not plan.evict
 
 
-def test_scheduler_respects_readiness():
+def test_scheduler_respects_readiness(_sched):
     s = _sched()
     twins = {0: TwinRecord(twin_id=0, ring_slot=0, samples=3)}   # < min
     assert s.plan(twins).admit == []
 
 
-def test_scheduler_preempts_only_after_min_residency():
+def test_scheduler_preempts_only_after_min_residency(_sched):
     s = _sched()
     resident = TwinRecord(twin_id=0, ring_slot=0, refit_slot=0, samples=50,
                           deployed=True, samples_at_deploy=50, residency=1)
@@ -63,7 +81,7 @@ def _resident(tid, slot, **kw):
     return TwinRecord(**d)
 
 
-def test_scheduler_releases_converged_resident():
+def test_scheduler_releases_converged_resident(_sched):
     s = _sched()
     resident = _resident(0, 0, residency=9, divergence=0.01)
     other = _resident(2, 1)                    # keeps the pool full
@@ -73,7 +91,7 @@ def test_scheduler_releases_converged_resident():
     assert (0, 1) in plan.admit
 
 
-def test_scheduler_releases_stuck_resident():
+def test_scheduler_releases_stuck_resident(_sched):
     """A non-converging resident cannot hold its slot forever."""
     s = _sched()
     resident = _resident(0, 0, residency=16, divergence=50.0)  # 2*max_res
@@ -83,7 +101,7 @@ def test_scheduler_releases_stuck_resident():
     assert plan.release == [0]
 
 
-def test_scheduler_free_slots_absorb_waiting_without_release():
+def test_scheduler_free_slots_absorb_waiting_without_release(_sched):
     """When idle slots can take every waiting twin, converged residents
     keep their slots (and their training state)."""
     s = _sched()
@@ -154,6 +172,33 @@ def test_server_slot_turnover_rotates_fleet(lv_world):
         rep = srv.tick()
         slotted |= {tid for _, tid in rep.admitted}
     assert slotted == {0, 1, 2, 3}
+
+
+def test_packed_mirrors_track_records_through_serving(lv_world):
+    """The packed arrays are the scheduler's truth; every server mutation
+    point must keep them consistent with the record metadata AND keep the
+    float32 divergence shadow in lockstep with the float64 column — a
+    stale mirror silently mis-ranks candidates, which the from_records
+    equivalence tests can never see."""
+    sys_, ys, us = lv_world
+    srv = _server(sys_, max_residency=3, min_residency=1)
+    chunk = 10
+    for t in range(30):
+        for i in range(4):
+            lo = (t * chunk) % 300
+            srv.ingest(i, ys[i, lo:lo + chunk], us[i, lo:lo + chunk])
+        srv.tick()
+        p = srv.packed
+        p.check_mirrors()
+        for rec in srv.twins.values():
+            row = rec.ring_slot
+            assert p.registered[row] and p.twin_id[row] == rec.twin_id
+            assert p.samples[row] == rec.samples
+            assert p.samples_at_deploy[row] == rec.samples_at_deploy
+            assert p.deployed[row] == rec.deployed
+            assert p.divergence[row] == rec.divergence
+            assert p.resident[row] == (rec.refit_slot is not None)
+            assert p.residency[row] == rec.residency
 
 
 def test_guard_fires_on_perturbed_dynamics(lv_world):

@@ -18,8 +18,12 @@ are skipped and reported, never failed — growing the sweep must not break
 the gate.  Run from the repo root:
 
     python tools/check_bench.py                 # strict: exit 1 on regression
-    python tools/check_bench.py --warn-only     # CI mode: report, exit 0
+    python tools/check_bench.py --warn-only     # report, exit 0
     python tools/check_bench.py --update        # bless fresh runs as baseline
+
+CI runs the STRICT mode against its smoke rows (tiny configs are stable
+enough to gate on); use `--warn-only` for full local sweeps on noisy
+machines where the trajectory report is wanted without the exit code.
 
 Stdlib only (runs in the docs/bench CI lanes without installing the repo).
 """
@@ -36,11 +40,13 @@ FRESH_DIR = ROOT / "bench_out"
 BASELINE_DIR = ROOT / "bench_out" / "baselines"
 
 # measurement columns: never part of the row-join identity
-LATENCY_COLS = ("p50_ms", "p99_ms", "fwd_ms", "grad_ms")
+LATENCY_COLS = ("p50_ms", "p99_ms", "fwd_ms", "grad_ms",
+                "plan_p50_ms", "plan_p99_ms")
 COUNT_COLS = ("violations",)
 NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
               "schedule_ms", "refit_ms", "deployed",
-              "dropped_samples", "flush_overflows", "trace_overhead_pct")
+              "dropped_samples", "flush_overflows", "trace_overhead_pct",
+              "pressure_ms", "pressure", "turnover")
 # NOTE: "ticks" stays in the identity — it separates smoke (6) / quick (12)
 # / full (24) rows of the same sweep point, which have different baselines.
 MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
