@@ -26,6 +26,11 @@ def main() -> None:
                     help="serve the online benchmark on the Pallas hot path "
                          "(use_pallas=True; compiled on TPU, interpreter "
                          "mode elsewhere) -> bench_out/online_pallas.csv")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injected serving: checkpoint overhead, "
+                         "shard-kill recovery + journal replay, degradation "
+                         "ladder -> bench_out/online_chaos.csv (use with "
+                         "--only online_scale)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -44,7 +49,7 @@ def main() -> None:
                            use_pallas=args.pallas)
     if args.only in (None, "online_scale"):
         from benchmarks import online_scale
-        online_scale.run(quick=quick, smoke=args.smoke)
+        online_scale.run(quick=quick, smoke=args.smoke, chaos=args.chaos)
     if args.only in (None, "sched_scale"):
         from benchmarks import sched_scale
         sched_scale.run(quick=quick, smoke=args.smoke)

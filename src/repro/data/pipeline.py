@@ -144,6 +144,11 @@ class BackgroundPump:
     `produce` returning None (nothing staged) enqueues nothing.  `idle()` is
     True once every kick issued so far has been fully processed — the drain
     barrier used to guarantee no sample is left in flight.
+
+    A `produce()` exception does NOT kill the worker silently: the error is
+    captured in `self.error`, the kick is marked served (so `idle()` and the
+    drain barrier cannot deadlock on a dead producer), and the next `drain()`
+    re-raises it on the consumer thread where it can be handled.
     """
 
     def __init__(self, produce, depth: int = 2):
@@ -154,6 +159,7 @@ class BackgroundPump:
         self._kicks = 0          # kicks issued
         self._served = 0         # kicks whose produce() has fully completed
         self._stop = False
+        self.error: BaseException | None = None   # first produce() failure
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -173,7 +179,14 @@ class BackgroundPump:
             self._event.clear()
             with self._lock:
                 target = self._kicks
-            item = self._produce()
+            try:
+                item = self._produce()
+            except BaseException as e:    # noqa: BLE001 — surfaced via drain
+                with self._lock:
+                    if self.error is None:
+                        self.error = e
+                    self._served = target    # keep idle()/drain barrier live
+                continue
             if item is not None:
                 self._q.put(item)     # blocks when full: backpressure
             with self._lock:
@@ -182,13 +195,20 @@ class BackgroundPump:
                 return
 
     def drain(self) -> list:
-        """Non-blocking: every batch the worker has parked so far."""
+        """Non-blocking: every batch the worker has parked so far.  Re-raises
+        a captured `produce()` failure (after handing over any batches that
+        completed before it) so producer errors surface on the consumer."""
         out = []
         while True:
             try:
                 out.append(self._q.get_nowait())
             except queue.Empty:
-                return out
+                break
+        with self._lock:
+            err, self.error = self.error, None
+        if err is not None:
+            raise err
+        return out
 
     def idle(self) -> bool:
         """True when no kick is pending or mid-produce (queued batches may
@@ -205,7 +225,10 @@ class BackgroundPump:
     def close(self) -> None:
         self._stop = True
         self._event.set()
-        self.drain()              # unblock a worker parked on a full queue
+        try:
+            self.drain()          # unblock a worker parked on a full queue
+        except BaseException:     # noqa: BLE001 — shutdown must not raise
+            pass
         self._thread.join(timeout=5.0)
 
 

@@ -73,13 +73,19 @@ class SimulatedPreemption(RuntimeError):
 
 @dataclass
 class FailureInjector:
-    """Raise SimulatedPreemption at `fail_at_step` (once)."""
+    """Raise SimulatedPreemption once the loop reaches `fail_at_step`.
+
+    Fires on `step >= fail_at_step` (once), not exact equality: loops that
+    skip step numbers (resume from a checkpoint, stride by accumulation,
+    tick counters that jump after a drain) must still hit the injected
+    failure instead of silently sailing past it.
+    """
     fail_at_step: int | None = None
     fired: bool = False
 
     def maybe_fail(self, step: int):
         if (self.fail_at_step is not None and not self.fired
-                and step == self.fail_at_step):
+                and step >= self.fail_at_step):
             self.fired = True
             raise SimulatedPreemption(f"injected failure at step {step}")
 

@@ -115,15 +115,22 @@ def restore(ckpt_dir: str | Path, step: int, like: PyTree,
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     leaves_like, treedef = _flatten(like)
-    assert len(manifest["leaves"]) == len(leaves_like), \
-        (len(manifest["leaves"]), len(leaves_like))
+    # Real exceptions, not asserts: these guard against restoring a
+    # checkpoint into a mismatched model and must survive `python -O`.
+    if len(manifest["leaves"]) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint {d} has {len(manifest['leaves'])} leaves but "
+            f"`like` has {len(leaves_like)} — structure mismatch")
     out = []
     for rec, ref in zip(manifest["leaves"], leaves_like):
         arr = np.load(d / rec["file"])
         if rec["dtype"] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16)
-        assert list(arr.shape) == list(ref.shape), (rec["path"], arr.shape,
-                                                    ref.shape)
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(
+                f"checkpoint leaf {rec['path']!r} has shape "
+                f"{tuple(arr.shape)} but `like` expects "
+                f"{tuple(ref.shape)} — shape mismatch")
         out.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, out)
     if shardings is not None:

@@ -52,6 +52,15 @@ monitor.py    `DivergenceGuard` — RK4-rolls every deployed theta over the
               reported; emits REFIT (physics drifted, re-recover) and ALERT
               (model untrustworthy — the safety abort signal) events.
 
+recovery.py   Crash-safety layer: `TwinCheckpointer` (per-shard atomic theta
+              store checkpoints, async off the tick loop), `TelemetryJournal`
+              (supervisor-side replay log bounded by the ring horizon),
+              `ChaosConfig`/`ChaosInjector` (fault injection: shard kills,
+              stragglers, torn checkpoints, ingest storms) and
+              `DegradationPolicy` (deadline-aware shedding ladder:
+              shrink guard -> defer refits -> skip promotion).  See
+              docs/ROBUSTNESS.md.
+
 Quick start
 -----------
     from repro.core.merinda import MerindaConfig
@@ -78,6 +87,11 @@ Sustained latency/throughput tables: benchmarks/online_serving.py
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
                                 GuardInstruments, GuardRotation)
 from repro.twin.packed import PackedFleet, fleet_pressure, fleet_scores
+from repro.twin.recovery import (ChaosConfig, ChaosInjector,
+                                 DegradationConfig, DegradationEvent,
+                                 DegradationPolicy, RecoveryConfig,
+                                 ShardFailure, TelemetryJournal,
+                                 TwinCheckpointer)
 from repro.twin.scheduler import (FederationConfig, PackedRefitScheduler,
                                   PriorityBuckets, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
@@ -86,8 +100,8 @@ from repro.twin.scheduler import (FederationConfig, PackedRefitScheduler,
 from repro.twin.server import TickReport, TwinServer, TwinServerConfig
 from repro.twin.sharded import (ShardedTickReport, ShardedTwinConfig,
                                 ShardedTwinServer)
-from repro.twin.stream import (RingConfig, StagingBuffer, TelemetryRing,
-                               prepare_flush)
+from repro.twin.stream import (RingConfig, StagingBuffer, StagingOverflow,
+                               TelemetryRing, prepare_flush)
 
 __all__ = [
     "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardInstruments",
@@ -96,7 +110,11 @@ __all__ = [
     "PriorityBuckets", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
     "SchedulerMetrics", "SlotFederation", "TwinRecord",
     "fleet_pressure", "fleet_scores",
+    "ChaosConfig", "ChaosInjector", "DegradationConfig", "DegradationEvent",
+    "DegradationPolicy", "RecoveryConfig", "ShardFailure", "TelemetryJournal",
+    "TwinCheckpointer",
     "TickReport", "TwinServer", "TwinServerConfig",
     "ShardedTickReport", "ShardedTwinConfig", "ShardedTwinServer",
-    "RingConfig", "StagingBuffer", "TelemetryRing", "prepare_flush",
+    "RingConfig", "StagingBuffer", "StagingOverflow", "TelemetryRing",
+    "prepare_flush",
 ]

@@ -226,26 +226,35 @@ class GuardRotation:
         return self.budget + self.carry
 
     def select(self, rows: np.ndarray, div_by_row: np.ndarray,
-               threshold: float) -> np.ndarray:
+               threshold: float, *, budget: int | None = None,
+               carry: int | None = None) -> np.ndarray:
         """Pick this tick's ring rows.
 
         rows: SORTED int array of eligible ring rows; div_by_row: full
         by-row EMA score array (indexed by ring row, not position).
         Returns at most `budget + carry` distinct rows.
+
+        `budget`/`carry` override the configured quotas for ONE call — the
+        deadline-degradation path (twin/recovery.py) shrinks the fused guard
+        width under overload without touching the rotation's steady-state
+        shape.  The cursor still advances by what was actually scored, so
+        the freshness bound degrades proportionally instead of breaking.
         """
+        eff_budget = self.budget if budget is None else max(1, budget)
+        eff_carry = self.carry if carry is None else max(0, carry)
         rows = np.asarray(rows)
         if rows.size == 0:
             return rows
         i = int(np.searchsorted(rows, self._cursor))
-        take = min(self.budget, rows.size)
+        take = min(eff_budget, rows.size)
         pick = rows[(i + np.arange(take)) % rows.size]
         self._cursor = int(pick[-1]) + 1
-        if self.carry:
+        if eff_carry:
             flagged = rows[div_by_row[rows] > threshold]
             flagged = flagged[~np.isin(flagged, pick)]
-            if flagged.size > self.carry:
+            if flagged.size > eff_carry:
                 part = np.argpartition(-div_by_row[flagged],
-                                       self.carry - 1)[:self.carry]
+                                       eff_carry - 1)[:eff_carry]
                 flagged = flagged[part]
             # deterministic order: most diverged first, row id breaks ties
             flagged = flagged[np.lexsort((flagged, -div_by_row[flagged]))]

@@ -96,6 +96,29 @@ class PackedFleet:
             raise AssertionError("div32 shadow drifted from divergence")
 
     # ------------------------------------------------------------------ #
+    _COLUMNS = ("twin_id", "registered", "samples", "samples_at_deploy",
+                "deployed", "divergence", "div32", "resident", "residency")
+
+    def snapshot(self) -> dict:
+        """Copy every column into a plain dict of numpy arrays — the
+        checkpointable packed-fleet state (twin/recovery.py).  COPIES, not
+        views: the async checkpoint writer must not race the serving
+        thread's in-place column mutations."""
+        return {c: getattr(self, c).copy() for c in self._COLUMNS}
+
+    def load(self, state: dict) -> None:
+        """Restore columns IN PLACE from a `snapshot()` dict.  In-place
+        (`[:]`) because the server's `_div` aliases `divergence` — rebinding
+        the array would silently sever the guard→scheduler data path."""
+        for c in self._COLUMNS:
+            col = getattr(self, c)
+            src = np.asarray(state[c])
+            if src.shape != col.shape:
+                raise ValueError(f"packed column {c!r}: snapshot shape "
+                                 f"{src.shape} != live shape {col.shape}")
+            col[:] = src
+
+    # ------------------------------------------------------------------ #
     def register(self, row: int, twin_id: int) -> None:
         """Bind a row to a twin id.  `registered` is set last — see class
         docstring for the concurrent-plan visibility argument."""

@@ -610,28 +610,43 @@ class SlotFederation:
     def pressures(self) -> list[float]:
         return list(self._ema)
 
-    def rebalance(self, pressures: list[float]) -> list[int]:
+    def rebalance(self, pressures: list[float],
+                  alive: list[bool] | None = None) -> list[int]:
         """pressures[i] = shard i's current aggregate demand; returns the
         per-shard active-slot grants (sums to total_slots when the physical
-        pools allow it)."""
+        pools allow it).
+
+        `alive` (default: all True) masks out DEAD shards: a dead shard gets
+        grant 0 and no floor — its share flows to the survivors until the
+        supervisor restarts it (twin/recovery.py failover).  Its pressure
+        EMA is held, not decayed, so the restarted shard re-enters the next
+        rebalance with its pre-crash demand instead of starting from zero.
+        """
         cfg = self.cfg
         n = len(self.shard_slots)
+        if alive is None:
+            alive = [True] * n
         a = cfg.smooth
-        self._ema = [a * p + (1 - a) * e
-                     for p, e in zip(pressures, self._ema)]
-        grants = [min(cfg.min_slots, cap) for cap in self.shard_slots]
+        self._ema = [a * p + (1 - a) * e if up else e
+                     for p, e, up in zip(pressures, self._ema, alive)]
+        grants = [min(cfg.min_slots, cap) if up else 0
+                  for cap, up in zip(self.shard_slots, alive)]
         budget = cfg.total_slots - sum(grants)
         while budget < 0:      # degenerate: floors exceed the global budget
             i = max(range(n), key=lambda j: grants[j])
             grants[i] -= 1
             budget += 1
-        weights = [max(e, 0.0) for e in self._ema]
+        weights = [max(e, 0.0) if up else 0.0
+                   for e, up in zip(self._ema, alive)]
         if sum(weights) <= 0:
-            weights = [1.0] * n        # no demand anywhere: split evenly
+            weights = [1.0 if up else 0.0 for up in alive]
+            if sum(weights) <= 0:      # every shard dead: park the budget
+                return grants
         # proportional-fair greedy: next slot to the shard whose grant is
         # smallest relative to its demand (deterministic, O(total_slots))
         while budget > 0:
-            cand = [i for i in range(n) if grants[i] < self.shard_slots[i]]
+            cand = [i for i in range(n)
+                    if alive[i] and grants[i] < self.shard_slots[i]]
             if not cand:
                 break
             i = min(cand, key=lambda j: (grants[j] / (weights[j] + 1e-9),

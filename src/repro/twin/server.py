@@ -63,11 +63,13 @@ from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
                                 GuardInstruments, GuardRotation)
 from repro.twin.packed import PackedFleet
+from repro.twin.recovery import (DegradationConfig, DegradationEvent,
+                                 DegradationPolicy)
 from repro.twin.scheduler import (PackedRefitScheduler, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
                                   SchedulerMetrics, TwinRecord)
 from repro.twin.stream import (FlushBatch, RingConfig, StagingBuffer,
-                               TelemetryRing, prepare_flush)
+                               StagingOverflow, TelemetryRing, prepare_flush)
 
 __all__ = ["TwinServerConfig", "TickReport", "TwinServer"]
 
@@ -113,6 +115,16 @@ class TwinServerConfig:
                                       # (device-fused scoring); "reference":
                                       # the O(n log n) dict-sorting oracle
     flush_pad: int = 8                # chunk-length quantum (bounds retraces)
+    degradation: DegradationConfig = DegradationConfig()
+                                      # deadline-aware shed ladder
+                                      # (twin/recovery.py; disabled default)
+    staging_capacity: int | None = None
+                                      # staging-buffer sample bound (None:
+                                      # unbounded — the seed behaviour)
+    ingest_strict: bool = True        # overflow after retries: raise (True)
+                                      # or shed oldest staged samples
+    ingest_retries: int = 3           # bounded backoff attempts on overflow
+    ingest_backoff_s: float = 2e-3    # first retry sleep (doubles per try)
     seed: int = 0
 
 
@@ -129,6 +141,9 @@ class TickReport:
     n_active: int = 0                 # twins resident in refit slots
     n_twins: int = 0                  # twins tracked
     n_guarded: int = 0                # twins scored by the guard this tick
+    degraded_level: int = 0           # shed ladder after this tick (0 = full)
+    degradation_events: list = field(default_factory=list)
+                                      # DegradationEvent transitions this tick
 
 
 class TwinServer:
@@ -237,12 +252,16 @@ class TwinServer:
         self._slot_twin: dict[int, int] = {}          # refit slot -> twin_id
         L = self.fleet.model.lib.size
         self._theta = jnp.zeros((cfg.max_twins + 1, m.n, L))
-        self._staging = StagingBuffer()
+        self._staging = StagingBuffer(capacity=cfg.staging_capacity)
+        self._degradation = DegradationPolicy(cfg.degradation, cfg.deadline_s)
         self._pump = (BackgroundPump(self._prepare_timed,
                                      depth=cfg.ingest_depth)
                       if cfg.async_ingest else None)
         self.tick_count = 0
         self._n_deployed = 0
+        self.inject_delay_s = 0.0     # chaos straggler (twin/recovery.py):
+                                      # slept INSIDE the timed tick region so
+                                      # the degradation policy sees the stall
         # recent-tick raw numbers (bounded; registry histograms are the
         # authoritative, never-growing stats — see _HISTORY note above)
         self.latencies: deque[float] = deque(maxlen=_HISTORY)
@@ -298,6 +317,28 @@ class TwinServer:
             "twin_pump_queue_depth",
             help="prepared flush batches awaiting the serving tick",
             labels=lab)
+        self._m_degraded = M.gauge(
+            "twin_degraded_level",
+            help="deadline-degradation ladder level (0 = full service)",
+            labels=lab)
+        self._m_deg_trans = {
+            d: M.counter("twin_degraded_transitions_total",
+                         help="degradation ladder moves by direction",
+                         labels={**lab, "direction": d})
+            for d in ("up", "down")}
+        self._m_shed = {
+            a: M.counter("twin_degraded_shed_total",
+                         help="ticks that shed a stage under degradation",
+                         labels={**lab, "action": a})
+            for a in ("guard", "refit", "promote")}
+        self._m_ingest_retries = M.counter(
+            "twin_ingest_retries_total",
+            help="ingest backoff retries after a staging overflow",
+            labels=lab)
+        self._m_ingest_dropped = M.counter(
+            "twin_ingest_dropped_total",
+            help="staged samples shed (drop-oldest) by non-strict ingest "
+                 "backpressure", labels=lab)
         self._guard_obs = GuardInstruments.create(M, lab)
 
     # ------------------------------------------------------------------ #
@@ -338,13 +379,23 @@ class TwinServer:
             self._live_dirty = True
 
     # ------------------------------------------------------------------ #
-    def ingest(self, twin_id: int, y, u=None):
+    def ingest(self, twin_id: int, y, u=None, *, force: bool = False):
         """Stage telemetry for `twin_id`: y [n] or [C, n], u [m] or [C, m].
 
         Host-side staging only — the device scatter happens once per tick in
         the fused flush, so per-sample ingest stays cheap.  Thread-safe:
         with `async_ingest` many sensor threads may call this concurrently
         with `tick()` (the staging buffer is the synchronized handoff).
+
+        Backpressure (bounded staging, `cfg.staging_capacity`): an overflow
+        retries up to `ingest_retries` times with doubling backoff (kicking
+        the pump each try so a stalled flush can clear); if still full,
+        strict mode re-raises `StagingOverflow` to the producer, non-strict
+        mode sheds the OLDEST staged samples (counted in
+        `twin_ingest_dropped_total`) and stages the new chunk — fresh
+        telemetry outranks stale backlog for a guard that scores NEWEST
+        windows.  `force=True` bypasses the bound entirely (crash-recovery
+        replay, twin/recovery.py).
         """
         rec = self.register(twin_id)
         y = np.atleast_2d(np.asarray(y, np.float32))
@@ -354,9 +405,35 @@ class TwinServer:
              else np.asarray(u, np.float32).reshape(C, m))
         if C > self.cfg.capacity:
             raise ValueError("chunk larger than ring capacity")
-        self._staging.append(rec.ring_slot, y, u)
+        try:
+            self._staging.append(rec.ring_slot, y, u, force=force)
+        except StagingOverflow:
+            self._ingest_backpressure(rec.ring_slot, y, u)
         if self._pump is not None:
             self._pump.kick()
+
+    def _ingest_backpressure(self, row: int, y, u) -> None:
+        """Bounded retry-with-backoff, then strict-raise or drop-oldest."""
+        delay = self.cfg.ingest_backoff_s
+        for _ in range(max(0, self.cfg.ingest_retries)):
+            self._m_ingest_retries.inc()
+            if self._pump is not None:
+                self._pump.kick()      # give the flusher a chance to drain
+            time.sleep(delay)
+            delay *= 2
+            try:
+                self._staging.append(row, y, u)
+                return
+            except StagingOverflow:
+                continue
+        if self.cfg.ingest_strict:
+            raise StagingOverflow(
+                f"staging buffer still full after "
+                f"{self.cfg.ingest_retries} retries "
+                f"(capacity {self.cfg.staging_capacity} samples)")
+        dropped = self._staging.drop_oldest(len(y))
+        self._m_ingest_dropped.inc(dropped)
+        self._staging.append(row, y, u, force=True)
 
     # -- staging flush: prepare (host, possibly background) + apply ----- #
     def _prepare(self) -> FlushBatch | None:
@@ -498,13 +575,19 @@ class TwinServer:
             self._n_deployed += 1
 
     # ------------------------------------------------------------------ #
-    def _update_divergence(self) -> tuple[list[GuardEvent], int]:
+    def _update_divergence(self, shed: bool = False
+                           ) -> tuple[list[GuardEvent], int]:
         gw = self.cfg.guard.window
         live = self._guard_live       # maintained incrementally, O(1)/tick
         if not live:
             return [], 0
         if self._rotation is None:
-            # full scan: one fused call over the whole store (O(twins))
+            # full scan: one fused call over the whole store (O(twins)).
+            # Degraded: the scan has ONE fused shape, so shedding means
+            # scoring every other tick — half the device work, freshness
+            # halves instead of breaking.
+            if shed and self.tick_count % 2 == 0:
+                return [], 0
             rows = jnp.arange(self.cfg.max_twins)
             ys, us = self.ring.latest(self._rstate, rows, gw)
             scores = np.asarray(self.guard.score(self._theta[:-1], ys, us))
@@ -513,14 +596,25 @@ class TwinServer:
                                 count=len(recs))
             raw = scores[srows]
         else:
-            # budgeted rotation: fixed-size fused call (O(budget))
+            # budgeted rotation: fixed-size fused call (O(budget)).
+            # Degraded: a SMALLER fixed width (budget // guard_shrink, no
+            # carry) — one extra compile the first time the ladder engages,
+            # then a genuinely cheaper rollout until pressure clears.
             if self._live_dirty:
                 self._live_rows = np.fromiter(sorted(live), np.int64,
                                               count=len(live))
                 self._live_dirty = False
-            pick = self._rotation.select(self._live_rows, self._div,
-                                         self.cfg.guard.refit_threshold)
-            rows_np = np.full((self._rotation.size,), self._scratch, np.int32)
+            if shed:
+                width = max(1, self._rotation.budget
+                            // max(1, self.cfg.degradation.guard_shrink))
+                pick = self._rotation.select(self._live_rows, self._div,
+                                             self.cfg.guard.refit_threshold,
+                                             budget=width, carry=0)
+            else:
+                width = self._rotation.size
+                pick = self._rotation.select(self._live_rows, self._div,
+                                             self.cfg.guard.refit_threshold)
+            rows_np = np.full((width,), self._scratch, np.int32)
             rows_np[:len(pick)] = pick
             rows = jnp.asarray(rows_np)
             ys, us = self.ring.latest(self._rstate, rows, gw)
@@ -581,8 +675,23 @@ class TwinServer:
             self._slot_ring[slot] = rec.ring_slot
             self._slot_twin[slot] = tid
 
-    def _refit(self) -> float | None:
+    def _refit(self, defer: bool = False, skip_promote: bool = False
+               ) -> float | None:
         if not self._slot_twin:
+            return None
+        if defer:
+            # degraded (level >= 2): slots hold — no train steps, residency
+            # frozen.  Candidates that already converged may still ship
+            # (level < 3): promotion is one shadow-eval rollout, far cheaper
+            # than steps_per_tick train steps, and a finished model serving
+            # beats a finished model waiting out an overload.
+            if not skip_promote:
+                deployable = [
+                    slot for slot, tid in self._slot_twin.items()
+                    if self.twins[tid].steps_in_slot >= self.cfg.deploy_after]
+                if deployable:
+                    y_win, u_win = self._slot_windows()
+                    self._promote(deployable, y_win, u_win)
             return None
         y_win, u_win = self._slot_windows()
         loss_vec = None
@@ -600,7 +709,7 @@ class TwinServer:
             self.packed.residency[rec.ring_slot] = rec.residency
             if rec.steps_in_slot >= self.cfg.deploy_after:
                 deployable.append(slot)
-        if deployable:
+        if deployable and not skip_promote:
             self._promote(deployable, y_win, u_win)
         return loss
 
@@ -673,14 +782,23 @@ class TwinServer:
         `steps_per_tick` fixed-shape train steps over `refit_slots` slots.
         """
         span = self.tracer.span
+        # degradation ladder: consult the level set by the PREVIOUS tick's
+        # observe() — shedding decisions are made before the work they shed
+        deg = self._degradation
+        shed_guard, defer_refit = deg.shed_guard, deg.defer_refit
+        skip_promote = deg.skip_promote
         with span("tick", tick=self.tick_count + 1, **self._labels):
             t0 = time.perf_counter()
             self.tick_count += 1
+            if self.inject_delay_s > 0.0:
+                time.sleep(self.inject_delay_s)
             with span("flush"):
                 self._flush()
             t1 = time.perf_counter()
             with span("guard"):
-                events, n_guarded = self._update_divergence()
+                if shed_guard:
+                    self._m_shed["guard"].inc()
+                events, n_guarded = self._update_divergence(shed=shed_guard)
             t2 = time.perf_counter()
             # bucketed path: plan straight off the packed arrays (a twin
             # registered mid-plan is visible only once `registered` flips,
@@ -698,7 +816,12 @@ class TwinServer:
                 self._apply_plan(plan)
             t3 = time.perf_counter()
             with span("refit"):
-                loss = self._refit()
+                if defer_refit:
+                    self._m_shed["refit"].inc()
+                if skip_promote:
+                    self._m_shed["promote"].inc()
+                loss = self._refit(defer=defer_refit,
+                                   skip_promote=skip_promote)
                 jax.block_until_ready(self._theta)
             t4 = time.perf_counter()
         latency = t4 - t0
@@ -709,6 +832,11 @@ class TwinServer:
             self._m_stage[stage].observe(dt)
         if latency > self.cfg.deadline_s:
             self._m_violations.inc()
+        deg_ev = deg.observe(self.tick_count, latency)
+        self._m_degraded.set(deg.level)
+        if deg_ev is not None:
+            self._m_deg_trans[
+                "up" if deg_ev.to_level > deg_ev.from_level else "down"].inc()
         n_active = len(self._slot_twin)
         self.refresh_counts.append(n_active)
         if n_active:
@@ -725,7 +853,9 @@ class TwinServer:
             deadline_met=latency <= self.cfg.deadline_s, loss=loss,
             events=events, admitted=plan.admit, evicted=plan.evict,
             released=plan.release, n_active=n_active,
-            n_twins=len(self.twins), n_guarded=n_guarded)
+            n_twins=len(self.twins), n_guarded=n_guarded,
+            degraded_level=deg.level,
+            degradation_events=[deg_ev] if deg_ev is not None else [])
 
     # ------------------------------------------------------------------ #
     def predict(self, twin_id: int, horizon: int, us=None):
@@ -768,6 +898,8 @@ class TwinServer:
             h.reset()
         self._m_violations.reset()
         self._m_refreshes.reset()
+        self._degradation.reset()     # compile stalls are not overload
+        self._m_degraded.set(0)
 
     def latency_summary(self) -> dict:
         """p50/p99 refresh latency vs the deadline + serving throughput.
@@ -805,3 +937,128 @@ class TwinServer:
             n = hist.count
             out[f"{stage}_ms"] = (hist.sum / n * 1e3) if n else 0.0
         return out
+
+    # -- crash-safe serving state (twin/recovery.py checkpoints) -------- #
+    @property
+    def degraded_level(self) -> int:
+        """Current deadline-degradation ladder level (0 = full service)."""
+        return self._degradation.level
+
+    _GUARD_KINDS = ("OK", "REFIT", "ALERT")
+
+    def snapshot_state(self) -> dict:
+        """Full serving state as a fixed-shape host pytree — what a
+        `TwinCheckpointer` writes and `restore_state` consumes.
+
+        Every leaf's shape is a function of the CONFIG alone (max_twins,
+        refit_slots, ring capacity, model dims), never of runtime
+        occupancy — so a fresh server's snapshot is a valid restore `like`
+        and `checkpoint.restore`'s shape checks catch config drift.  All
+        host arrays are COPIES (the async checkpoint writer must not race
+        the serving thread's in-place mutations); device leaves are
+        device_get by the checkpointer.
+
+        Serving-thread only (reads device state mid-mutation otherwise).
+        Excludes the staging buffer/pump (in-flight samples are the
+        telemetry journal's job) and the bounded debug/metric windows
+        (registry children are restart-safe monotone counters).
+        """
+        cap = self.cfg.max_twins
+        refit_slot = np.full((cap,), -1, np.int32)
+        deploy_tick = np.full((cap,), -1, np.int64)
+        admitted_tick = np.full((cap,), -1, np.int64)
+        steps_in_slot = np.zeros((cap,), np.int64)
+        guard_code = np.zeros((cap,), np.int8)
+        guard_live = np.zeros((cap,), bool)
+        kind_code = {k: i for i, k in enumerate(self._GUARD_KINDS)}
+        for rec in self.twin_snapshot().values():
+            row = rec.ring_slot
+            refit_slot[row] = -1 if rec.refit_slot is None else rec.refit_slot
+            deploy_tick[row] = rec.deploy_tick
+            admitted_tick[row] = rec.admitted_tick
+            steps_in_slot[row] = rec.steps_in_slot
+            guard_code[row] = kind_code[
+                self._guard_state.get(rec.twin_id, "OK")]
+        for row in self._guard_live:
+            guard_live[row] = True
+        slot_twin_ids = np.full((self.cfg.refit_slots,), -1, np.int64)
+        for slot, tid in self._slot_twin.items():
+            slot_twin_ids[slot] = tid
+        return {
+            "theta": self._theta,
+            "rstate": self._rstate,
+            "fstate": self._fstate,
+            "key": self._key,
+            "packed": self.packed.snapshot(),
+            "rows": {"refit_slot": refit_slot, "deploy_tick": deploy_tick,
+                     "admitted_tick": admitted_tick,
+                     "steps_in_slot": steps_in_slot,
+                     "guard_code": guard_code, "guard_live": guard_live},
+            "slot_ring": self._slot_ring.copy(),
+            "slot_twin_ids": slot_twin_ids,
+            "scalars": np.asarray(
+                [self.tick_count, self._n_deployed,
+                 0 if self._rotation is None else self._rotation._cursor,
+                 -1 if self._max_active is None else self._max_active],
+                np.int64),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Rebuild this server's serving state from a `snapshot_state`
+        tree (typically `checkpoint.restore`d into a fresh server's own
+        snapshot as `like`).  In-place where aliasing matters: the packed
+        columns are loaded with `[:]` so `_div` keeps aliasing
+        `packed.divergence`.  The registry (TwinRecord dict, row maps,
+        guard-live set) is rebuilt from the packed columns + per-row extras.
+        Serving-thread only; call before any post-restart ingest/tick."""
+        self._theta = jnp.asarray(state["theta"])
+        self._rstate = jax.tree.map(jnp.asarray, state["rstate"])
+        self._fstate = jax.tree.map(jnp.asarray, state["fstate"])
+        self._key = jnp.asarray(state["key"])
+        self.packed.load(state["packed"])
+        self._slot_ring[:] = np.asarray(state["slot_ring"], np.int32)
+        scalars = np.asarray(state["scalars"])
+        self.tick_count = int(scalars[0])
+        self._n_deployed = int(scalars[1])
+        if self._rotation is not None:
+            self._rotation._cursor = int(scalars[2])
+        ma = int(scalars[3])
+        self._max_active = None if ma < 0 else ma
+        rows = state["rows"]
+        refit_slot = np.asarray(rows["refit_slot"])
+        deploy_tick = np.asarray(rows["deploy_tick"])
+        admitted_tick = np.asarray(rows["admitted_tick"])
+        steps_in_slot = np.asarray(rows["steps_in_slot"])
+        guard_code = np.asarray(rows["guard_code"])
+        guard_live = np.asarray(rows["guard_live"])
+        p = self.packed
+        with self._reg_lock:
+            self.twins.clear()
+            self._row2rec.clear()
+            self._guard_state.clear()
+            self._guard_live.clear()
+            self._slot_twin.clear()
+            for row in np.flatnonzero(p.registered):
+                row = int(row)
+                rec = TwinRecord(
+                    twin_id=int(p.twin_id[row]), ring_slot=row,
+                    refit_slot=(None if refit_slot[row] < 0
+                                else int(refit_slot[row])),
+                    samples=int(p.samples[row]),
+                    samples_at_deploy=int(p.samples_at_deploy[row]),
+                    deployed=bool(p.deployed[row]),
+                    deploy_tick=int(deploy_tick[row]),
+                    admitted_tick=int(admitted_tick[row]),
+                    residency=int(p.residency[row]),
+                    steps_in_slot=int(steps_in_slot[row]),
+                    divergence=float(p.divergence[row]))
+                self.twins[rec.twin_id] = rec
+                self._row2rec[row] = rec
+                self._guard_state[rec.twin_id] = \
+                    self._GUARD_KINDS[int(guard_code[row])]
+                if guard_live[row]:
+                    self._guard_live[row] = rec
+            for slot, tid in enumerate(np.asarray(state["slot_twin_ids"])):
+                if tid >= 0:
+                    self._slot_twin[slot] = int(tid)
+        self._live_dirty = True

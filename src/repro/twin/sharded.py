@@ -42,6 +42,9 @@ import numpy as np
 
 from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import GuardEvent
+from repro.twin.recovery import (ChaosConfig, ChaosInjector, RecoveryConfig,
+                                 ShardFailure, TelemetryJournal,
+                                 TwinCheckpointer)
 from repro.twin.scheduler import FederationConfig, SlotFederation
 from repro.twin.server import _HISTORY, TickReport, TwinServer, \
     TwinServerConfig
@@ -58,6 +61,11 @@ class ShardedTwinConfig:
     min_shard_slots: int = 1          # per-shard grant floor
     rebalance_every: int = 4          # federation period (ticks)
     pressure_smooth: float = 0.5      # EMA on the pressure signal
+    recovery: RecoveryConfig | None = None
+                                      # per-shard checkpointing + journal +
+                                      # supervised restart (twin/recovery.py)
+    chaos: ChaosConfig | None = None  # injected failure schedule (tests/
+                                      # benchmarks; None in production)
 
     @staticmethod
     def uniform(server: TwinServerConfig, shards: int,
@@ -71,12 +79,20 @@ class ShardedTickReport:
     tick: int
     latency_s: float
     deadline_met: bool
-    reports: list[TickReport]             # per shard, in shard order
+    reports: list[TickReport | None]      # per shard, in shard order
+                                          # (None: shard was dead this tick)
     grants: list[int]                     # active-slot grant per shard
     events: list[GuardEvent] = field(default_factory=list)
     n_active: int = 0
     n_twins: int = 0
     n_guarded: int = 0
+    degraded_level: int = 0               # max shed-ladder level across shards
+    dead_shards: int = 0                  # shards down at the end of the tick
+    restarted: list = field(default_factory=list)
+                                          # restart records this tick:
+                                          # {shard, ckpt_tick, replayed, lost,
+                                          #  down_ticks}
+    replayed_samples: int = 0             # journal samples replayed this tick
 
 
 class ShardedTwinServer:
@@ -134,6 +150,20 @@ class ShardedTwinServer:
         self.refresh_counts: deque = deque(maxlen=_HISTORY)
         self.deadline_s = min(s.cfg.deadline_s for s in self.shards)
 
+        # fault-tolerance layer (twin/recovery.py): checkpointer + journals
+        # live with the SUPERVISOR so they survive any shard's death
+        self.checkpointer = (TwinCheckpointer(cfg.recovery,
+                                              metrics=self.metrics)
+                             if cfg.recovery is not None else None)
+        self.journals = ([TelemetryJournal(cfg.recovery.journal_horizon
+                                           or s.capacity)
+                          for s in cfg.servers]
+                         if cfg.recovery is not None else None)
+        self.chaos = (ChaosInjector(cfg.chaos)
+                      if cfg.chaos is not None else None)
+        self._dead: dict[int, int] = {}           # shard -> supervisor tick
+                                                  # it died on
+
         # fleet-level instruments: the whole sharded tick (all shards,
         # serial) — per-shard detail lives in each shard's labeled children
         M = self.metrics
@@ -154,6 +184,30 @@ class ShardedTwinServer:
             for i in range(len(self.shards))]
         for g, n in zip(self._m_grants, self.grants):
             g.set(n)
+        self._m_deaths = M.counter(
+            "twin_shard_deaths_total",
+            help="shard failures (injected or organic) the supervisor "
+                 "handled")
+        self._m_restarts = M.counter(
+            "twin_shard_restarts_total",
+            help="supervised shard restarts (checkpoint restore + journal "
+                 "replay)")
+        self._m_dead = M.gauge(
+            "twin_dead_shards", help="shards currently down")
+        self._m_recovery = M.histogram(
+            "twin_recovery_ticks",
+            help="supervisor ticks a shard spent down before its restart "
+                 "completed", unit="ticks")
+        self._m_replayed = M.counter(
+            "twin_replay_samples_total",
+            help="journal samples replayed into restarted shards")
+        self._m_replay_lost = M.counter(
+            "twin_replay_lost_samples_total",
+            help="samples past the journal horizon at restart "
+                 "(unrecoverable by design; ring would have dropped them)")
+        self._m_slow_inj = M.counter(
+            "twin_chaos_slow_injections_total",
+            help="injected straggler sleeps before shard ticks")
 
     # ------------------------------------------------------------------ #
     @property
@@ -168,6 +222,13 @@ class ShardedTwinServer:
             self._placement[twin_id] = s
         return s
 
+    def _shard_srv(self, i: int) -> TwinServer:
+        srv = self.shards[i]
+        if srv is None:
+            raise RuntimeError(f"shard {i} is down (died at supervisor tick "
+                               f"{self._dead.get(i)}; restart pending)")
+        return srv
+
     def register(self, twin_id: int, shard: int | None = None):
         """Start tracking; `shard` pins placement explicitly (family routing
         for heterogeneous fleets) — conflicting re-pins raise."""
@@ -176,14 +237,28 @@ class ShardedTwinServer:
             if prev != shard:
                 raise ValueError(f"twin {twin_id} already placed on shard "
                                  f"{prev}, cannot move to {shard}")
-        return self.shards[self.shard_of(twin_id)].register(twin_id)
+        return self._shard_srv(self.shard_of(twin_id)).register(twin_id)
 
     # ------------------------------------------------------------------ #
     def ingest(self, twin_id: int, y, u=None):
-        self.shards[self.shard_of(twin_id)].ingest(twin_id, y, u)
+        """Route telemetry to the twin's shard, journaling first (recovery
+        enabled): the journal must already hold a sample when the shard that
+        received it dies.  Ingest into a DEAD shard is journal-only — the
+        sample is replayed at restart, so producers never block on a crash.
+        A chaos storm duplicates the chunk (journal and shard alike), so
+        replay stays consistent with what the shard actually saw."""
+        s = self.shard_of(twin_id)
+        copies = 1 + (self.chaos.storm_extra(s, self.tick_count)
+                      if self.chaos is not None else 0)
+        srv = self.shards[s]
+        for _ in range(copies):
+            if self.journals is not None:
+                self.journals[s].append(twin_id, y, u)
+            if srv is not None:
+                srv.ingest(twin_id, y, u)
 
     def deploy(self, twin_id: int, theta) -> None:
-        self.shards[self.shard_of(twin_id)].deploy(twin_id, theta)
+        self._shard_srv(self.shard_of(twin_id)).deploy(twin_id, theta)
 
     def deploy_many(self, twin_ids, thetas) -> None:
         """Warm-start across shards: one fused scatter per shard."""
@@ -193,57 +268,169 @@ class ShardedTwinServer:
             by_shard.setdefault(self.shard_of(tid), []).append(k)
         for s, ks in by_shard.items():
             ids = [twin_ids[k] for k in ks]
-            self.shards[s].deploy_many(
+            self._shard_srv(s).deploy_many(
                 ids, thetas if thetas.ndim == 2 else thetas[ks])
 
     def predict(self, twin_id: int, horizon: int, us=None):
-        return self.shards[self.shard_of(twin_id)].predict(twin_id, horizon,
-                                                           us)
+        return self._shard_srv(self.shard_of(twin_id)).predict(twin_id,
+                                                               horizon, us)
 
     # ------------------------------------------------------------------ #
+    def _alive(self) -> list[bool]:
+        return [srv is not None for srv in self.shards]
+
+    def _rebalance(self) -> None:
+        """Re-divide the global slot budget; dead shards pressure 0 / no
+        floor (their share flows to survivors until restart)."""
+        pressures = [srv.refit_pressure() if srv is not None else 0.0
+                     for srv in self.shards]
+        self.grants = self.federation.rebalance(pressures,
+                                                alive=self._alive())
+        for srv, g, gauge in zip(self.shards, self.grants, self._m_grants):
+            if srv is not None:
+                srv.set_active_slots(g)
+            gauge.set(g)
+
     def tick(self) -> ShardedTickReport:
-        """One serving cycle: every shard ticks, then (periodically) the
-        federation re-divides the global slot budget by shard pressure."""
+        """One serving cycle: restart any dead shard whose delay elapsed,
+        tick every live shard (applying the chaos schedule: straggler
+        sleeps, kills), checkpoint shards on their cadence, then
+        (periodically) rebalance the global slot budget by shard pressure.
+
+        A shard death never fails the supervisor tick: the dead shard's
+        report slot is None, its grant flows to the survivors, and ingest
+        for its twins is journaled until the restart replays it."""
         with self.tracer.span("sharded_tick", tick=self.tick_count + 1,
                               shards=len(self.shards)):
             t0 = time.perf_counter()
             self.tick_count += 1
-            reports = [srv.tick() for srv in self.shards]
-            if self.tick_count % self.cfg.rebalance_every == 0:
+            restarted: list[dict] = []
+            if self._dead and self.cfg.recovery is not None:
+                for i, died_at in sorted(self._dead.items()):
+                    if (self.tick_count - died_at
+                            >= self.cfg.recovery.restart_delay_ticks):
+                        with self.tracer.span("restart_shard", shard=i):
+                            restarted.append(self._restart_shard(i))
+            reports: list[TickReport | None] = []
+            for i, srv in enumerate(self.shards):
+                if srv is None:
+                    reports.append(None)
+                    continue
+                if self.chaos is not None:
+                    if self.chaos.should_kill(i, self.tick_count):
+                        try:
+                            raise ShardFailure(i, self.tick_count)
+                        except ShardFailure:
+                            self._kill_shard(i)
+                        reports.append(None)
+                        continue
+                    delay = self.chaos.slow_delay(i, self.tick_count)
+                    if delay > 0:
+                        self._m_slow_inj.inc()
+                    srv.inject_delay_s = delay
+                reports.append(srv.tick())
+                if self.checkpointer is not None:
+                    self.checkpointer.maybe_save(i, srv.tick_count,
+                                                 srv.snapshot_state)
+            if restarted or self.tick_count % self.cfg.rebalance_every == 0:
                 with self.tracer.span("rebalance"):
-                    self.grants = self.federation.rebalance(
-                        [srv.refit_pressure() for srv in self.shards])
-                    for srv, g, gauge in zip(self.shards, self.grants,
-                                             self._m_grants):
-                        srv.set_active_slots(g)
-                        gauge.set(g)
+                    self._rebalance()
             latency = time.perf_counter() - t0
         self.latencies.append(latency)
         self._m_tick.observe(latency)
         if latency > self.deadline_s:
             self._m_violations.inc()
-        n_active = sum(r.n_active for r in reports)
+        live = [r for r in reports if r is not None]
+        n_active = sum(r.n_active for r in live)
         self.refresh_counts.append(n_active)
         if n_active:
             self._m_refreshes.inc(n_active)
+        self._m_dead.set(len(self._dead))
         return ShardedTickReport(
             tick=self.tick_count, latency_s=latency,
             deadline_met=latency <= self.deadline_s,
             reports=reports, grants=list(self.grants),
-            events=[e for r in reports for e in r.events],
-            n_active=sum(r.n_active for r in reports),
-            n_twins=sum(r.n_twins for r in reports),
-            n_guarded=sum(r.n_guarded for r in reports))
+            events=[e for r in live for e in r.events],
+            n_active=n_active,
+            n_twins=sum(r.n_twins for r in live),
+            n_guarded=sum(r.n_guarded for r in live),
+            degraded_level=max((r.degraded_level for r in live), default=0),
+            dead_shards=len(self._dead),
+            restarted=restarted,
+            replayed_samples=sum(r["replayed"] for r in restarted))
+
+    # -- failover: kill (chaos/organic) + supervised restart ------------ #
+    def _kill_shard(self, i: int) -> None:
+        """Take shard `i` down: stop its pump, drop the server object, hand
+        its slot grant to the survivors.  Its rings/thetas die with it —
+        recovery is checkpoint + journal replay at restart."""
+        srv = self.shards[i]
+        if srv is not None:
+            srv.close()
+        self.shards[i] = None
+        self._dead[i] = self.tick_count
+        self._m_deaths.inc()
+        self._m_dead.set(len(self._dead))
+        if (self.chaos is not None and self.checkpointer is not None
+                and self.chaos.should_tear()):
+            self.checkpointer.tear_latest(i)
+        self._rebalance()
+
+    def _restart_shard(self, i: int) -> dict:
+        """Supervised restart: fresh server (sharing a surviving donor's
+        compiled modules when configs match), restore from the last
+        COMMITTED checkpoint, replay the journal suffix, rejoin the
+        federation.  Returns the restart record for the tick report."""
+        scfg = self.cfg.servers[i]
+        donor = next((s for s in self.shards
+                      if s is not None and s.cfg == scfg), None)
+        srv = TwinServer(scfg, share_modules_from=donor, seed=scfg.seed + i,
+                         metrics=self.metrics, tracer=self.tracer, shard=i)
+        ckpt_tick = None
+        if self.checkpointer is not None:
+            ckpt_tick, state = self.checkpointer.restore_latest(
+                i, srv.snapshot_state())
+            if state is not None:
+                srv.restore_state(state)
+        self.shards[i] = srv
+        died_at = self._dead.pop(i)
+        replayed = lost = 0
+        if self.journals is not None:
+            journal = self.journals[i]
+            for tid in journal.twin_ids():
+                rec = srv.twins.get(tid)
+                seen = rec.samples if rec is not None else 0
+                chunks, lost_t = journal.replay_since(tid, seen)
+                lost += lost_t
+                for y, u in chunks:
+                    # force: replay must not be shed by ingest backpressure
+                    srv.ingest(tid, y, u, force=True)
+                    replayed += len(y)
+            srv.drain()      # every replayed sample reaches the ring NOW
+        srv.set_active_slots(self.grants[i])
+        down = self.tick_count - died_at
+        self._m_restarts.inc()
+        self._m_recovery.observe(down)
+        self._m_replayed.inc(replayed)
+        if lost:
+            self._m_replay_lost.inc(lost)
+        self._m_dead.set(len(self._dead))
+        return {"shard": i, "ckpt_tick": ckpt_tick, "replayed": replayed,
+                "lost": lost, "down_ticks": down}
 
     # ------------------------------------------------------------------ #
     def drain(self) -> None:
         """Barrier: every ingested sample reaches its shard's ring."""
         for srv in self.shards:
-            srv.drain()
+            if srv is not None:
+                srv.drain()
 
     def close(self) -> None:
+        if self.checkpointer is not None:
+            self.checkpointer.wait()
         for srv in self.shards:
-            srv.close()
+            if srv is not None:
+                srv.close()
 
     # ------------------------------------------------------------------ #
     def reset_latency_stats(self) -> None:
@@ -253,7 +440,8 @@ class ShardedTwinServer:
         self._m_violations.reset()
         self._m_refreshes.reset()
         for srv in self.shards:
-            srv.reset_latency_stats()
+            if srv is not None:
+                srv.reset_latency_stats()
 
     def latency_summary(self) -> dict:
         """p50/p99 of the WHOLE sharded tick + aggregate twin throughput.
@@ -275,9 +463,9 @@ class ShardedTwinServer:
             "twin_refreshes_per_s":
                 self._m_refreshes.value / max(h.sum, 1e-9),
             "dropped_samples": sum(int(s._m_dropped.value)
-                                   for s in self.shards),
+                                   for s in self.shards if s is not None),
             "flush_overflows": sum(int(s._m_overflow.value)
-                                   for s in self.shards),
+                                   for s in self.shards if s is not None),
         }
 
     def stage_summary(self) -> dict:
@@ -285,6 +473,8 @@ class ShardedTwinServer:
         column is the scale benchmark's O(budget) evidence."""
         out: dict[str, float] = {}
         for srv in self.shards:
+            if srv is None:
+                continue
             for k, v in srv.stage_summary().items():
                 out[k] = out.get(k, 0.0) + v
         return out

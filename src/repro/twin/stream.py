@@ -25,6 +25,7 @@ equivalent chronological trace (tested in tests/test_twin_stream.py).
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass
 from functools import partial
 
@@ -35,8 +36,8 @@ import numpy as np
 from repro.data.pipeline import make_ring_windows, ring_latest
 from repro.distributed.sharding import shard
 
-__all__ = ["RingConfig", "TelemetryRing", "StagingBuffer", "FlushBatch",
-           "prepare_flush"]
+__all__ = ["RingConfig", "TelemetryRing", "StagingBuffer", "StagingOverflow",
+           "FlushBatch", "prepare_flush"]
 
 
 @dataclass(frozen=True)
@@ -139,6 +140,13 @@ class TelemetryRing:
 # --------------------------------------------------------------------------- #
 # Host-side staging: thread-safe chunk accumulation + fused-flush preparation
 # --------------------------------------------------------------------------- #
+class StagingOverflow(RuntimeError):
+    """A bounded `StagingBuffer` cannot accept a chunk without exceeding its
+    capacity.  Raised from `append` so the caller decides the policy —
+    `TwinServer.ingest` retries with backoff and, in non-strict mode, sheds
+    the oldest staged samples instead of failing the producer."""
+
+
 class StagingBuffer:
     """Thread-safe host-side staging of telemetry chunks, keyed by ring row.
 
@@ -155,23 +163,62 @@ class StagingBuffer:
     Chronological order per row is preserved across swaps: chunks appended
     before a swap land in an earlier `FlushBatch`, and batches are applied in
     FIFO order by the consumer.
+
+    With `capacity` set the buffer is bounded: `append` raises
+    `StagingOverflow` once the pending backlog would exceed it (a stalled
+    flusher must surface as backpressure, not unbounded host memory), and
+    `drop_oldest` sheds the globally oldest staged chunks to make room —
+    the degradation path for non-strict producers.
     """
 
-    def __init__(self):
+    def __init__(self, capacity: int | None = None):
         self._lock = threading.Lock()
         self._buf: dict[int, list] = {}
+        self._order: deque[int] = deque()   # rows in chunk-append order
+        self.capacity = capacity
         self.staged_samples = 0      # samples appended, monotonic
         self.swapped_samples = 0     # samples handed off via swap(), monotonic
+        self.dropped_samples = 0     # samples shed by drop_oldest, monotonic
 
-    def append(self, row: int, y: np.ndarray, u: np.ndarray) -> None:
+    def append(self, row: int, y: np.ndarray, u: np.ndarray, *,
+               force: bool = False) -> None:
+        """Stage one chunk.  Raises `StagingOverflow` when bounded and full;
+        `force=True` bypasses the bound (used after an explicit
+        `drop_oldest` so the shed-then-stage sequence cannot starve)."""
         with self._lock:
+            if (self.capacity is not None and not force
+                    and self._pending_locked() + len(y) > self.capacity):
+                raise StagingOverflow(
+                    f"staging buffer full: {self._pending_locked()} pending "
+                    f"+ {len(y)} new > capacity {self.capacity}")
             self._buf.setdefault(row, []).append((y, u))
+            self._order.append(row)
             self.staged_samples += len(y)
+
+    def drop_oldest(self, need: int) -> int:
+        """Shed the globally oldest staged chunks until at least `need`
+        samples are freed (or the buffer is empty).  Returns samples
+        dropped.  Whole chunks are shed — per-row chronology is preserved
+        because only each row's HEAD chunk is ever removed."""
+        dropped = 0
+        with self._lock:
+            while dropped < need and self._order:
+                row = self._order.popleft()
+                chunks = self._buf.get(row)
+                if not chunks:       # row already consumed by a swap
+                    continue
+                y, _ = chunks.pop(0)
+                dropped += len(y)
+                if not chunks:
+                    del self._buf[row]
+            self.dropped_samples += dropped
+        return dropped
 
     def swap(self) -> dict[int, list]:
         """Atomically take everything staged so far (may be empty)."""
         with self._lock:
             buf, self._buf = self._buf, {}
+            self._order.clear()
             self.swapped_samples += sum(len(c[0]) for cs in buf.values()
                                         for c in cs)
             return buf
@@ -180,12 +227,16 @@ class StagingBuffer:
         with self._lock:
             return not self._buf
 
+    def _pending_locked(self) -> int:
+        return (self.staged_samples - self.swapped_samples
+                - self.dropped_samples)
+
     def pending_samples(self) -> int:
         """Samples staged but not yet handed to a flush — the ingestion
         backlog gauge (`twin_staging_pending_samples`): a producer outrunning
         the tick rate shows up here before it shows up as drops."""
         with self._lock:
-            return self.staged_samples - self.swapped_samples
+            return self._pending_locked()
 
 
 @dataclass

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.train import checkpoint as ckpt
 
@@ -27,6 +28,19 @@ def test_roundtrip_bit_exact(tmp_path):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def test_restore_structure_mismatch_raises_value_error(tmp_path):
+    """Config drift between writer and restorer must be a catchable error
+    (a failover supervisor decides fallback vs rebuild), not an assert."""
+    tree = _tree(jax.random.PRNGKey(3))
+    ckpt.save(tmp_path, 1, tree)
+    with pytest.raises(ValueError, match="structure mismatch"):
+        ckpt.restore(tmp_path, 1, {"only": jnp.zeros((2,))})
+    wrong_shape = jax.tree.map(lambda a: jnp.zeros((3,) + a.shape, a.dtype),
+                               tree)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(tmp_path, 1, jax.eval_shape(lambda: wrong_shape))
 
 
 def test_torn_checkpoint_ignored(tmp_path):

@@ -65,6 +65,18 @@ def test_failure_injection_bit_exact_resume(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_failure_injector_fires_on_skipped_step():
+    """`>=` semantics: a schedule whose exact step number never occurs
+    (checkpoint cadence skips it, a tick loop restarts past it) still
+    fires — once — at the first step at or beyond the target."""
+    inj = FailureInjector(fail_at_step=5)
+    inj.maybe_fail(3)
+    with pytest.raises(SimulatedPreemption):
+        inj.maybe_fail(7)                   # 5 and 6 never happened
+    inj.maybe_fail(8)                       # one-shot: no refire
+    assert FailureInjector(fail_at_step=None).maybe_fail(10 ** 9) is None
+
+
 def test_straggler_detector():
     det = StragglerDetector(threshold=3.0)
     assert not det.observe(0, 1.0)

@@ -46,10 +46,21 @@ COUNT_COLS = ("violations",)
 NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
               "schedule_ms", "refit_ms", "deployed",
               "dropped_samples", "flush_overflows", "trace_overhead_pct",
-              "pressure_ms", "pressure", "turnover")
+              "pressure_ms", "pressure", "turnover",
+              # online_chaos.csv recovery columns: counts depend on where
+              # the injected schedule lands relative to measured ticks —
+              # reported, not gated (the chaos TESTS gate the semantics)
+              "degraded_ticks", "recovery_ticks", "replayed_samples",
+              "lost_samples", "shard_deaths", "ckpt_overhead_pct")
 # NOTE: "ticks" stays in the identity — it separates smoke (6) / quick (12)
 # / full (24) rows of the same sweep point, which have different baselines.
 MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
+
+# fault-injection tables are gated WARN-ONLY even in strict mode: the
+# kill-shard row's tail latency is the restore tick (disk + replay bound,
+# machine-dependent), so its trajectory is reported but never exit-1s CI.
+# The chaos TESTS (pytest -m chaos) are the hard gate on recovery semantics.
+WARN_ONLY_FILES = frozenset({"online_chaos.csv"})
 
 
 def load_csv(path: Path) -> list[dict]:
@@ -134,6 +145,7 @@ def main(argv=None) -> int:
         return 0 if args.warn_only else 1
 
     total_reg: list[str] = []
+    total_warn: list[str] = []
     total_checked = 0
     for base_path in sorted(args.baseline_dir.glob("*.csv")):
         fresh_path = args.fresh_dir / base_path.name
@@ -144,12 +156,19 @@ def main(argv=None) -> int:
             load_csv(fresh_path), load_csv(base_path),
             tolerance=args.tolerance)
         total_checked += checked
-        total_reg.extend(f"{base_path.name}: {r}" for r in reg)
+        if base_path.name in WARN_ONLY_FILES:
+            total_warn.extend(f"{base_path.name}: {r}" for r in reg)
+        else:
+            total_reg.extend(f"{base_path.name}: {r}" for r in reg)
+        warn_note = " (warn-only file)" if base_path.name in WARN_ONLY_FILES \
+            else ""
         note = f"; {len(skipped)} unmatched" if skipped else ""
         print(f"[check_bench] {base_path.name}: {checked} rows checked, "
-              f"{len(reg)} regressions{note}")
+              f"{len(reg)} regressions{warn_note}{note}")
         for s in skipped:
             print(f"  (skip) {s}")
+    for r in total_warn:
+        print(f"WARNING {r}")
     for r in total_reg:
         print(f"REGRESSION {r}")
     verdict = ("ok" if not total_reg else
