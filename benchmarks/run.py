@@ -20,8 +20,8 @@ def main() -> None:
                     help="tiny configs (CI smoke lane; overrides --full)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "roofline",
-                             "online", "online_scale", "sched_scale",
-                             "hotpath"])
+                             "online", "online_scale", "online_federated",
+                             "sched_scale", "hotpath"])
     ap.add_argument("--pallas", action="store_true",
                     help="serve the online benchmark on the Pallas hot path "
                          "(use_pallas=True; compiled on TPU, interpreter "
@@ -50,6 +50,9 @@ def main() -> None:
     if args.only in (None, "online_scale"):
         from benchmarks import online_scale
         online_scale.run(quick=quick, smoke=args.smoke, chaos=args.chaos)
+    if args.only in (None, "online_federated"):
+        from benchmarks import online_federated
+        online_federated.run(quick=quick, smoke=args.smoke)
     if args.only in (None, "sched_scale"):
         from benchmarks import sched_scale
         sched_scale.run(quick=quick, smoke=args.smoke)

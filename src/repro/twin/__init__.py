@@ -7,8 +7,19 @@ recovers one model from one recorded trace; this package is the serving-scale
 loop around it: **sense -> recover -> predict -> guard**, continuously, for a
 whole tracked fleet on a bounded compute budget.
 
+The STABLE surface is the `TwinService` protocol (service.py) and the three
+servers that implement it at three scales — see docs/API.md for the
+contract, and the "stable vs internal" split at the bottom of this
+docstring.
+
 Modules
 -------
+service.py    `TwinService` — the protocol every server implements
+              (ingest/ingest_many/tick/drain/predict/snapshot_state/...),
+              plus the shared config bases `DeadlineConfig` and
+              `FleetTopologyConfig`.  The conformance suite
+              (tests/test_service_conformance.py) pins the semantics.
+
 stream.py     `TelemetryRing` — per-twin fixed-capacity telemetry rings
               stored as device arrays.  One jitted scatter ingests a chunk
               for every twin (`ingest`); one jitted gather turns the newest
@@ -26,17 +37,31 @@ scheduler.py  Slot-based refit scheduling mirroring serve/engine.ServeEngine's
               `RefitScheduler` is the O(n log n) dict-sorting reference the
               equivalence tests hold it to.  `SlotFederation` divides a
               global active-slot budget across per-shard schedulers by
-              aggregate pressure (sharded serving).
+              aggregate pressure (sharded + federated serving).
 
 packed.py     `PackedFleet` — the packed, row-indexed scheduler-state arrays
               (samples, deploy watermark, divergence, residency) that the
               server maintains incrementally and the fused scoring /
               pressure kernels reduce on device.
 
-sharded.py    `ShardedTwinServer` — N shards, each its own ring + slot pool
-              + theta store + scheduler, under one federation: the 10k+
-              tracked-object architecture (async ingest per shard, budgeted
-              guard rotation, slot grants following divergence pressure).
+sharded.py    `ShardedTwinServer` — N shards IN ONE PROCESS, each its own
+              ring + slot pool + theta store + scheduler, under one
+              federation: the 10k+ tracked-object architecture (async
+              ingest per shard, budgeted guard rotation, slot grants
+              following divergence pressure).
+
+federation.py `FederatedTwinServer` — the same architecture across REAL
+              process boundaries: a `FederationCoordinator` owning N
+              `ShardWorker` subprocesses (each a `TwinServer` + its
+              checkpointer), supervisor-side telemetry journals, failure
+              detection + supervised restart with journal-tail replay, and
+              an optional TCP ingestion front door for remote telemetry
+              producers.
+
+wire.py       The versioned wire format federation speaks: message
+              dataclasses, the JSON-header + raw-array-blob codec, stream
+              framing, `IngestFrontDoor`/`FrontDoorClient`.  Framing
+              internals are NOT a stable API (docs/API.md).
 
 server.py     `TwinServer` — ties the loop together.  `ingest(twin_id, y, u)`
               stages telemetry; each `tick()` flushes to the rings, scores
@@ -70,20 +95,27 @@ Quick start
                            max_twins=64, refit_slots=8)
     server = TwinServer(cfg)
     for t in range(1000):
-        for twin_id, (y, u) in telemetry_at(t):
-            server.ingest(twin_id, y, u)
+        server.ingest_many(telemetry_at(t))      # [(twin_id, y[, u]), ...]
         report = server.tick()          # fused refit of every active slot
         for ev in report.events:        # REFIT / ALERT
             handle(ev)
     ys = server.predict(twin_id, horizon=50)
 
+Scale out by swapping the config, not the call sites (`TwinService`):
+`ShardedTwinConfig.uniform(cfg, shards)` -> `ShardedTwinServer`, or
+`FederatedTwinConfig.uniform(cfg, workers, front_door=True)` ->
+`FederatedTwinServer`.
+
 End-to-end scenarios: examples/online_twinning.py (64 F-8 twins, mid-stream
 dynamics switch -> guard fires, scheduler re-recovers) and
 examples/sharded_fleet.py (1k+ heterogeneous twins across federated shards).
 Sustained latency/throughput tables: benchmarks/online_serving.py
-(`--only online`) and benchmarks/online_scale.py (`--only online_scale`,
-64 -> 10k twins).
+(`--only online`), benchmarks/online_scale.py (`--only online_scale`,
+64 -> 10k twins) and benchmarks/online_federated.py
+(`--only online_federated`, multi-process).
 """
+from repro.twin.federation import (FederatedTwinConfig, FederatedTwinServer,
+                                   FederationCoordinator, ShardWorker)
 from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
                                 GuardInstruments, GuardRotation)
 from repro.twin.packed import PackedFleet, fleet_pressure, fleet_scores
@@ -98,23 +130,47 @@ from repro.twin.scheduler import (FederationConfig, PackedRefitScheduler,
                                   SchedulerMetrics, SlotFederation,
                                   TwinRecord)
 from repro.twin.server import TickReport, TwinServer, TwinServerConfig
+from repro.twin.service import (DeadlineConfig, FleetTopologyConfig,
+                                TwinService, conforms)
 from repro.twin.sharded import (ShardedTickReport, ShardedTwinConfig,
                                 ShardedTwinServer)
 from repro.twin.stream import (RingConfig, StagingBuffer, StagingOverflow,
                                TelemetryRing, prepare_flush)
+from repro.twin.wire import FrontDoorClient, IngestFrontDoor
 
-__all__ = [
-    "DivergenceGuard", "GuardConfig", "GuardEvent", "GuardInstruments",
-    "GuardRotation",
+# --------------------------------------------------------------------------- #
+# STABLE serving surface (docs/API.md): the protocol, the three servers that
+# implement it, their configs, and the report/event types callers consume.
+# Everything callers need to serve a fleet at any scale.
+# --------------------------------------------------------------------------- #
+_STABLE = [
+    "TwinService", "conforms",
+    "DeadlineConfig", "FleetTopologyConfig",
+    "TwinServer", "TwinServerConfig", "TickReport",
+    "ShardedTwinServer", "ShardedTwinConfig", "ShardedTickReport",
+    "FederatedTwinServer", "FederatedTwinConfig",
+    "FrontDoorClient", "IngestFrontDoor",
+    "GuardConfig", "GuardEvent",
+    "RecoveryConfig", "ChaosConfig",
+    "DegradationConfig", "DegradationEvent",
+]
+
+# --------------------------------------------------------------------------- #
+# INTERNAL building blocks, exported for tests/benchmarks/extension authors.
+# Subject to change without deprecation (packed layouts, wire framing,
+# scheduler internals) — depend on the stable surface instead where possible.
+# --------------------------------------------------------------------------- #
+_INTERNAL = [
+    "FederationCoordinator", "ShardWorker",
+    "DivergenceGuard", "GuardInstruments", "GuardRotation",
     "FederationConfig", "PackedFleet", "PackedRefitScheduler",
     "PriorityBuckets", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
     "SchedulerMetrics", "SlotFederation", "TwinRecord",
     "fleet_pressure", "fleet_scores",
-    "ChaosConfig", "ChaosInjector", "DegradationConfig", "DegradationEvent",
-    "DegradationPolicy", "RecoveryConfig", "ShardFailure", "TelemetryJournal",
-    "TwinCheckpointer",
-    "TickReport", "TwinServer", "TwinServerConfig",
-    "ShardedTickReport", "ShardedTwinConfig", "ShardedTwinServer",
+    "ChaosInjector", "DegradationPolicy", "ShardFailure",
+    "TelemetryJournal", "TwinCheckpointer",
     "RingConfig", "StagingBuffer", "StagingOverflow", "TelemetryRing",
     "prepare_flush",
 ]
+
+__all__ = _STABLE + _INTERNAL

@@ -54,6 +54,7 @@ from __future__ import annotations
 import heapq
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -581,11 +582,55 @@ class PackedRefitScheduler:
 # --------------------------------------------------------------------------- #
 # Federation: divide a global active-slot budget across per-shard schedulers
 # --------------------------------------------------------------------------- #
-@dataclass(frozen=True)
+@dataclass(frozen=True, init=False)
 class FederationConfig:
-    total_slots: int        # global active-refit budget across all shards
-    min_slots: int = 1      # per-shard grant floor (keeps every shard live)
-    smooth: float = 0.5     # EMA weight of the newest pressure reading
+    """Slot-federation knobs; field names match `FleetTopologyConfig`
+    (twin/service.py), the config base both deployment shapes extend.
+
+    The pre-federation names (`min_slots=`, `smooth=`) are accepted as
+    deprecated keyword aliases for one release — they warn and route to the
+    canonical fields."""
+    total_slots: int                # global active-refit budget, all shards
+    min_shard_slots: int = 1        # per-shard grant floor (keeps shards live)
+    pressure_smooth: float = 0.5    # EMA weight of the newest pressure reading
+
+    def __init__(self, total_slots: int, min_shard_slots: int | None = None,
+                 pressure_smooth: float | None = None, *,
+                 min_slots: int | None = None, smooth: float | None = None):
+        for old, new, val in (("min_slots", "min_shard_slots", min_slots),
+                              ("smooth", "pressure_smooth", smooth)):
+            if val is not None:
+                warnings.warn(
+                    f"FederationConfig({old}=...) is deprecated; use "
+                    f"{new}=... (one-release shim, twin/service.py "
+                    "consolidation)", DeprecationWarning, stacklevel=2)
+        if min_slots is not None:
+            if min_shard_slots is not None:
+                raise TypeError("pass min_shard_slots OR min_slots, not both")
+            min_shard_slots = min_slots
+        if smooth is not None:
+            if pressure_smooth is not None:
+                raise TypeError("pass pressure_smooth OR smooth, not both")
+            pressure_smooth = smooth
+        object.__setattr__(self, "total_slots", total_slots)
+        object.__setattr__(self, "min_shard_slots",
+                           1 if min_shard_slots is None else min_shard_slots)
+        object.__setattr__(self, "pressure_smooth",
+                           0.5 if pressure_smooth is None else pressure_smooth)
+
+    @property
+    def min_slots(self) -> int:
+        """Deprecated alias of `min_shard_slots` (one-release shim)."""
+        warnings.warn("FederationConfig.min_slots is deprecated; read "
+                      "min_shard_slots", DeprecationWarning, stacklevel=2)
+        return self.min_shard_slots
+
+    @property
+    def smooth(self) -> float:
+        """Deprecated alias of `pressure_smooth` (one-release shim)."""
+        warnings.warn("FederationConfig.smooth is deprecated; read "
+                      "pressure_smooth", DeprecationWarning, stacklevel=2)
+        return self.pressure_smooth
 
 
 class SlotFederation:
@@ -626,10 +671,10 @@ class SlotFederation:
         n = len(self.shard_slots)
         if alive is None:
             alive = [True] * n
-        a = cfg.smooth
+        a = cfg.pressure_smooth
         self._ema = [a * p + (1 - a) * e if up else e
                      for p, e, up in zip(pressures, self._ema, alive)]
-        grants = [min(cfg.min_slots, cap) if up else 0
+        grants = [min(cfg.min_shard_slots, cap) if up else 0
                   for cap, up in zip(self.shard_slots, alive)]
         budget = cfg.total_slots - sum(grants)
         while budget < 0:      # degenerate: floors exceed the global budget

@@ -65,6 +65,7 @@ from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
 from repro.twin.packed import PackedFleet
 from repro.twin.recovery import (DegradationConfig, DegradationEvent,
                                  DegradationPolicy)
+from repro.twin.service import DeadlineConfig
 from repro.twin.scheduler import (PackedRefitScheduler, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
                                   SchedulerMetrics, TwinRecord)
@@ -84,7 +85,10 @@ _HISTORY = 4096
 
 
 @dataclass(frozen=True)
-class TwinServerConfig:
+class TwinServerConfig(DeadlineConfig):
+    """Single-server knobs; `deadline_s` (1.0 s default — 5x under the 5 s
+    human-reaction budget) comes from the shared `DeadlineConfig` base
+    (twin/service.py) so every server config agrees on its meaning."""
     merinda: MerindaConfig
     max_twins: int                    # tracked-object capacity
     refit_slots: int = 8              # concurrent refits (compute budget)
@@ -97,7 +101,6 @@ class TwinServerConfig:
     sparsify_after: int = 60          # per-slot warmup (FleetConfig)
     deploy_after: int = 24            # train steps before a slot's theta ships
     promote_margin: float = 0.7       # candidate must score < margin * incumbent
-    deadline_s: float = 1.0           # 5x under the 5 s human-reaction budget
     guard: GuardConfig = GuardConfig()
     guard_budget: int | None = None   # None: score the whole store per tick;
                                       # int: rotating subset of this size
@@ -411,6 +414,20 @@ class TwinServer:
             self._ingest_backpressure(rec.ring_slot, y, u)
         if self._pump is not None:
             self._pump.kick()
+
+    def ingest_many(self, batch, *, force: bool = False) -> int:
+        """Batched `ingest`: `batch` iterates (twin_id, y) or (twin_id, y, u)
+        chunks — one call per producer flush instead of one per sample, the
+        shape the network front door (twin/wire.py IngestBatch) arrives in.
+        Returns the number of SAMPLES staged.  Same thread-safety and
+        backpressure contract as `ingest`."""
+        staged = 0
+        for chunk in batch:
+            tid, y = chunk[0], chunk[1]
+            u = chunk[2] if len(chunk) > 2 else None
+            self.ingest(tid, y, u, force=force)
+            staged += np.atleast_2d(np.asarray(y)).shape[0]
+        return staged
 
     def _ingest_backpressure(self, row: int, y, u) -> None:
         """Bounded retry-with-backoff, then strict-raise or drop-oldest."""

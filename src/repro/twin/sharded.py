@@ -42,30 +42,23 @@ import numpy as np
 
 from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import GuardEvent
-from repro.twin.recovery import (ChaosConfig, ChaosInjector, RecoveryConfig,
-                                 ShardFailure, TelemetryJournal,
-                                 TwinCheckpointer)
-from repro.twin.scheduler import FederationConfig, SlotFederation
+from repro.twin.recovery import (ChaosInjector, ShardFailure,
+                                 TelemetryJournal, TwinCheckpointer)
+from repro.twin.scheduler import SlotFederation
 from repro.twin.server import _HISTORY, TickReport, TwinServer, \
     TwinServerConfig
+from repro.twin.service import FleetTopologyConfig
 
 __all__ = ["ShardedTwinConfig", "ShardedTickReport", "ShardedTwinServer"]
 
 
 @dataclass(frozen=True)
-class ShardedTwinConfig:
-    servers: tuple[TwinServerConfig, ...]   # one per shard (may differ)
-    total_slots: int | None = None    # global active-refit budget
-                                      # (None: sum of physical pools —
-                                      # federation never constrains)
-    min_shard_slots: int = 1          # per-shard grant floor
-    rebalance_every: int = 4          # federation period (ticks)
-    pressure_smooth: float = 0.5      # EMA on the pressure signal
-    recovery: RecoveryConfig | None = None
-                                      # per-shard checkpointing + journal +
-                                      # supervised restart (twin/recovery.py)
-    chaos: ChaosConfig | None = None  # injected failure schedule (tests/
-                                      # benchmarks; None in production)
+class ShardedTwinConfig(FleetTopologyConfig):
+    """In-process fleet: the topology knobs (slot budget, grant floor,
+    rebalance cadence, smoothing, recovery, chaos) live in
+    `FleetTopologyConfig` — shared verbatim with `FederatedTwinConfig`
+    (twin/federation.py), the multi-process deployment of the same shape."""
+    servers: tuple[TwinServerConfig, ...] = ()   # one per shard (may differ)
 
     @staticmethod
     def uniform(server: TwinServerConfig, shards: int,
@@ -135,11 +128,7 @@ class ShardedTwinServer:
             self.shards.append(srv)
 
         pools = [s.cfg.refit_slots for s in self.shards]
-        total = sum(pools) if cfg.total_slots is None else cfg.total_slots
-        self.federation = SlotFederation(
-            FederationConfig(total_slots=total,
-                             min_slots=cfg.min_shard_slots,
-                             smooth=cfg.pressure_smooth), pools)
+        self.federation = SlotFederation(cfg.make_federation(pools), pools)
         self.grants = self.federation.rebalance([0.0] * len(pools))
         for srv, g in zip(self.shards, self.grants):
             srv.set_active_slots(g)
@@ -148,7 +137,8 @@ class ShardedTwinServer:
         self.tick_count = 0
         self.latencies: deque = deque(maxlen=_HISTORY)
         self.refresh_counts: deque = deque(maxlen=_HISTORY)
-        self.deadline_s = min(s.cfg.deadline_s for s in self.shards)
+        self.deadline_s = (cfg.deadline_s if cfg.deadline_s is not None
+                           else min(s.cfg.deadline_s for s in self.shards))
 
         # fault-tolerance layer (twin/recovery.py): checkpointer + journals
         # live with the SUPERVISOR so they survive any shard's death
@@ -240,13 +230,15 @@ class ShardedTwinServer:
         return self._shard_srv(self.shard_of(twin_id)).register(twin_id)
 
     # ------------------------------------------------------------------ #
-    def ingest(self, twin_id: int, y, u=None):
+    def ingest(self, twin_id: int, y, u=None, *, force: bool = False):
         """Route telemetry to the twin's shard, journaling first (recovery
         enabled): the journal must already hold a sample when the shard that
         received it dies.  Ingest into a DEAD shard is journal-only — the
         sample is replayed at restart, so producers never block on a crash.
         A chaos storm duplicates the chunk (journal and shard alike), so
-        replay stays consistent with what the shard actually saw."""
+        replay stays consistent with what the shard actually saw.
+        `force=True` bypasses shard staging backpressure (crash-recovery
+        replay) — same contract as `TwinServer.ingest`."""
         s = self.shard_of(twin_id)
         copies = 1 + (self.chaos.storm_extra(s, self.tick_count)
                       if self.chaos is not None else 0)
@@ -255,7 +247,19 @@ class ShardedTwinServer:
             if self.journals is not None:
                 self.journals[s].append(twin_id, y, u)
             if srv is not None:
-                srv.ingest(twin_id, y, u)
+                srv.ingest(twin_id, y, u, force=force)
+
+    def ingest_many(self, batch, *, force: bool = False) -> int:
+        """Batched `ingest` over (twin_id, y[, u]) chunks; returns the
+        number of SAMPLES staged (journal-only samples for dead shards
+        count — they WILL be served after replay)."""
+        staged = 0
+        for chunk in batch:
+            tid, y = chunk[0], chunk[1]
+            u = chunk[2] if len(chunk) > 2 else None
+            self.ingest(tid, y, u, force=force)
+            staged += np.atleast_2d(np.asarray(y)).shape[0]
+        return staged
 
     def deploy(self, twin_id: int, theta) -> None:
         self._shard_srv(self.shard_of(twin_id)).deploy(twin_id, theta)
@@ -419,6 +423,13 @@ class ShardedTwinServer:
                 "lost": lost, "down_ticks": down}
 
     # ------------------------------------------------------------------ #
+    def snapshot_state(self) -> dict:
+        """Host pytree of the whole fleet: one `TwinServer.snapshot_state`
+        sub-tree per LIVE shard, keyed `"shard<i>"` (dead shards omitted —
+        their truth is the checkpoint + journal)."""
+        return {f"shard{i}": srv.snapshot_state()
+                for i, srv in enumerate(self.shards) if srv is not None}
+
     def drain(self) -> None:
         """Barrier: every ingested sample reaches its shard's ring."""
         for srv in self.shards:

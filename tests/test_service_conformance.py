@@ -1,0 +1,190 @@
+"""TwinService conformance: one scenario, three implementations, one truth.
+
+The protocol (twin/service.py, docs/API.md) promises that `TwinServer`,
+`ShardedTwinServer`, and `FederatedTwinServer` are interchangeable to a
+caller.  This suite runs the canonical mission scenario — ingest healthy
+telemetry, inflict mid-stream model damage, watch the guard escalate to
+ALERT, repair, watch it de-escalate — against all three and asserts the
+GUARD EVENT STREAMS ARE IDENTICAL: same (tick, twin, kind) transitions,
+same scores.  Guard-only serving (deploy_after never reached) makes the
+event stream a pure function of deployed thetas + telemetry, so any
+divergence is a routing/ordering/wire bug, not noise.
+
+The federated run covers the whole tentpole path in passing: worker spawn,
+columnar `IngestBatch` framing, `Deploy` frames, tick fan-out/collect, and
+event reconstruction from `TickDone` — if any of it bends the data, this
+suite sees a different event stream.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.merinda import MerindaConfig
+from repro.systems.lotka_volterra import LotkaVolterra
+from repro.systems.simulate import simulate_batch
+from repro.twin import (FederatedTwinConfig, FederatedTwinServer,
+                        GuardConfig, ShardedTwinConfig, ShardedTwinServer,
+                        TwinServer, TwinServerConfig, TwinService, conforms)
+
+N_TWINS = 8
+DAMAGED = {2, 5}
+PER_TICK = 10
+HEALTHY_TICKS = 4      # all models correct
+DAMAGED_TICKS = 6      # twins in DAMAGED serve a negated theta
+RECOVER_TICKS = 6      # repaired; guard must de-escalate
+IMPLS = ("single", "sharded", "federated")
+
+
+@pytest.fixture(scope="module")
+def lv_world():
+    sys_ = LotkaVolterra()
+    tr = simulate_batch(sys_, jax.random.PRNGKey(0), batch=N_TWINS,
+                        horizon=400, noise_std=0.002)
+    return sys_, np.asarray(tr.ys_noisy)
+
+
+def _base_cfg(sys_):
+    """Guard-only serving: deploy_after is unreachable, so guard events are
+    a deterministic function of (deployed theta, telemetry) — identical
+    across implementations by contract."""
+    return TwinServerConfig(
+        merinda=MerindaConfig(n=2, m=0, order=2, hidden=8, head_hidden=8,
+                              n_active=4, dt=sys_.spec.dt),
+        max_twins=N_TWINS, refit_slots=2, capacity=128, window=16, stride=8,
+        windows_per_twin=4, steps_per_tick=1, deploy_after=10 ** 6,
+        min_residency=1, guard=GuardConfig(window=16))
+
+
+def _make(impl, cfg):
+    if impl == "single":
+        return TwinServer(cfg)
+    if impl == "sharded":
+        return ShardedTwinServer(ShardedTwinConfig.uniform(cfg, 2))
+    return FederatedTwinServer(FederatedTwinConfig.uniform(cfg, 2))
+
+
+def _run_scenario(srv, sys_, ys, cfg):
+    """ingest -> damage -> ALERT -> recover; returns the full event log."""
+    true = np.asarray(sys_.true_theta(cfg.merinda.library))
+    thetas = np.stack([true] * N_TWINS)
+    for tid in range(N_TWINS):
+        srv.register(tid)
+    srv.deploy_many(list(range(N_TWINS)), thetas)
+    events = []
+    tick = 0
+
+    def serve(n_ticks):
+        nonlocal tick
+        for _ in range(n_ticks):
+            staged = srv.ingest_many(
+                [(tid, ys[tid, tick * PER_TICK:(tick + 1) * PER_TICK])
+                 for tid in range(N_TWINS)])
+            assert staged == N_TWINS * PER_TICK
+            rep = srv.tick()
+            events.extend(rep.events)
+            tick += 1
+
+    serve(HEALTHY_TICKS)
+    damaged = sorted(DAMAGED)
+    srv.deploy_many(damaged, np.stack([-true] * len(damaged)))   # damage
+    serve(DAMAGED_TICKS)
+    srv.deploy_many(damaged, np.stack([true] * len(damaged)))    # repair
+    serve(RECOVER_TICKS)
+    srv.drain()
+    return events
+
+
+@pytest.fixture(scope="module")
+def scenario_events(lv_world):
+    """Event log per implementation (one federated boot for the module)."""
+    sys_, ys = lv_world
+    cfg = _base_cfg(sys_)
+    out = {}
+    for impl in IMPLS:
+        srv = _make(impl, cfg)
+        try:
+            assert conforms(srv) == []
+            assert isinstance(srv, TwinService)
+            out[impl] = _run_scenario(srv, sys_, ys, cfg)
+        finally:
+            srv.close()
+    return out
+
+
+def _keyed(events):
+    """Canonical order: multi-shard servers report per shard, the single
+    server in ring order — same transitions, different within-tick order."""
+    return sorted((e.tick, e.twin_id, e.kind, e.score) for e in events)
+
+
+def test_scenario_emits_the_mission_sequence(scenario_events):
+    """Sanity on ONE implementation before comparing them: damage drives
+    exactly the damaged twins to ALERT (a negated theta is severe enough to
+    skip the REFIT rung), repair de-escalates."""
+    ev = scenario_events["single"]
+    assert ev, "scenario produced no guard events at all"
+    alerted = {e.twin_id for e in ev if e.kind == "ALERT"}
+    assert alerted == DAMAGED
+    assert {e.twin_id for e in ev} == DAMAGED     # healthy twins stay silent
+    for tid in DAMAGED:
+        kinds = [e.kind for e in ev if e.twin_id == tid]
+        first_alert = kinds.index("ALERT")
+        assert ("REFIT" in kinds[first_alert:]    # de-escalated after repair
+                ), f"twin {tid} never came down from ALERT"
+        assert all(e.tick > HEALTHY_TICKS for e in ev if e.twin_id == tid)
+
+
+@pytest.mark.parametrize("impl", [i for i in IMPLS if i != "single"])
+def test_guard_events_identical_across_implementations(scenario_events, impl):
+    """THE conformance claim: the exact (tick, twin, kind) transition set —
+    and the scores — survive sharding and the process/wire boundary."""
+    ref = _keyed(scenario_events["single"])
+    got = _keyed(scenario_events[impl])
+    assert [(t, i, k) for t, i, k, _ in got] \
+        == [(t, i, k) for t, i, k, _ in ref]
+    np.testing.assert_allclose([s for *_, s in got], [s for *_, s in ref],
+                               rtol=1e-6)
+
+
+def test_sample_accounting_identical(lv_world):
+    """`ingest_many` returns the same staged-sample count on every
+    implementation, including the force path (protocol contract)."""
+    sys_, ys = lv_world
+    cfg = _base_cfg(sys_)
+    batch = [(tid, ys[tid, :PER_TICK]) for tid in range(N_TWINS)]
+    for impl in ("single", "sharded"):
+        srv = _make(impl, cfg)
+        try:
+            assert srv.ingest_many(batch) == N_TWINS * PER_TICK
+            assert srv.ingest_many(batch, force=True) == N_TWINS * PER_TICK
+            srv.drain()
+        finally:
+            srv.close()
+
+
+def test_federation_config_deprecated_kwargs():
+    """Satellite of the config consolidation: old `FederationConfig`
+    kwargs keep working for one release, warning, and route to the new
+    field names; mixing old and new spellings is an error."""
+    from repro.twin import FederationConfig
+
+    with pytest.warns(DeprecationWarning, match="min_slots"):
+        cfg = FederationConfig(8, min_slots=2)
+    assert cfg.min_shard_slots == 2
+    with pytest.warns(DeprecationWarning):
+        assert cfg.min_slots == 2          # deprecated read-alias
+    with pytest.warns(DeprecationWarning, match="smooth"):
+        cfg = FederationConfig(8, smooth=0.25)
+    assert cfg.pressure_smooth == 0.25
+    with pytest.raises(TypeError):
+        FederationConfig(8, min_shard_slots=1, min_slots=1)
+
+
+def test_conforms_reports_missing_surface():
+    class Half:
+        def ingest(self):
+            pass
+
+    missing = conforms(Half())
+    assert "tick" in missing and "ingest_many" in missing
+    assert "ingest" not in missing

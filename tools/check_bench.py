@@ -51,7 +51,11 @@ NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
               # the injected schedule lands relative to measured ticks —
               # reported, not gated (the chaos TESTS gate the semantics)
               "degraded_ticks", "recovery_ticks", "replayed_samples",
-              "lost_samples", "shard_deaths", "ckpt_overhead_pct")
+              "lost_samples", "shard_deaths", "ckpt_overhead_pct",
+              # online_federated.csv: the federated/in-process throughput
+              # ratio depends on host core count (HOST-LIMITED on starved
+              # machines) — reported, never gated
+              "speedup", "grants_migrated")
 # NOTE: "ticks" stays in the identity — it separates smoke (6) / quick (12)
 # / full (24) rows of the same sweep point, which have different baselines.
 MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
@@ -60,7 +64,10 @@ MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
 # kill-shard row's tail latency is the restore tick (disk + replay bound,
 # machine-dependent), so its trajectory is reported but never exit-1s CI.
 # The chaos TESTS (pytest -m chaos) are the hard gate on recovery semantics.
-WARN_ONLY_FILES = frozenset({"online_chaos.csv"})
+# online_federated.csv is warn-only for its first release: worker-process
+# boot and IPC latency vary with CI host load far more than in-process
+# ticks do; tests/test_federation.py is the hard gate on the semantics.
+WARN_ONLY_FILES = frozenset({"online_chaos.csv", "online_federated.csv"})
 
 
 def load_csv(path: Path) -> list[dict]:
