@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "roofline",
                              "online", "online_scale", "online_federated",
-                             "sched_scale", "hotpath"])
+                             "sched_scale", "hotpath", "scenarios"])
     ap.add_argument("--pallas", action="store_true",
                     help="serve the online benchmark on the Pallas hot path "
                          "(use_pallas=True; compiled on TPU, interpreter "
@@ -53,6 +53,9 @@ def main() -> None:
     if args.only in (None, "online_federated"):
         from benchmarks import online_federated
         online_federated.run(quick=quick, smoke=args.smoke)
+    if args.only in (None, "scenarios"):
+        from benchmarks import scenarios
+        scenarios.run(quick=quick, smoke=args.smoke)
     if args.only in (None, "sched_scale"):
         from benchmarks import sched_scale
         sched_scale.run(quick=quick, smoke=args.smoke)

@@ -1,0 +1,157 @@
+"""Scenario-engine benchmark: what-if throughput under live serving load.
+
+The paper's predictive claim, measured: a 10k-twin sharded fleet keeps its
+serving ticks inside the mission deadline WHILE answering a stream of
+batched what-if queries (`TwinServer.scenario()` — K counterfactual input
+sequences x confidence ensemble, one fused rollout per query).  Each
+measured tick interleaves `queries` scenario calls (round-robin over the
+fleet) with the full ingest/guard/refit/promote cycle, so the numbers are
+the contended ones an operator would see, not an idle-fleet microbenchmark.
+
+Reported per sweep point (bench_out/scenarios.csv):
+
+  * p50_ms / p99_ms — per-scenario-call wall latency (gated);
+  * tick_p50_ms     — serving-tick latency under query load (gated);
+  * violations      — tick deadline misses PLUS scenario calls that
+                      exceeded the deadline (gated: the acceptance bar is
+                      0 at every sweep size);
+  * scenarios_per_s — counterfactual trajectories answered per wall
+                      second over the measured region (noisy, reported).
+
+Sync ingest (the contention-free reference mode on starved hosts) keeps
+scenario-call latencies attributable.  Emitted by benchmarks/run.py
+(`--only scenarios`); `--smoke` runs the tiny CI config.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.merinda import MerindaConfig
+from repro.systems.f8_crusader import F8Crusader
+from repro.systems.simulate import simulate_batch
+from repro.twin.monitor import GuardConfig
+from repro.twin.scenario import ScenarioConfig, ScenarioRefused
+from repro.twin.server import TwinServerConfig
+from repro.twin.sharded import ShardedTwinConfig, ShardedTwinServer
+
+CHUNK = 8          # telemetry samples per twin per tick
+GUARD_BUDGET = 128
+WARMUP = 18        # jit compile (tick AND scenario shapes) lands in warmup
+
+
+def _serve_scenarios(n_twins: int, shards: int, ticks: int, *,
+                     k: int = 8, horizon: int = 20, queries: int = 8,
+                     ensemble: int = 4, seed: int = 0) -> dict:
+    system = F8Crusader()
+    sim_h = CHUNK * (WARMUP + ticks) + 1
+    sim = simulate_batch(system, jax.random.PRNGKey(seed), batch=n_twins,
+                         horizon=sim_h, noise_std=0.002)
+    ys, us = np.asarray(sim.ys_noisy), np.asarray(sim.us)
+
+    per_shard = -(-n_twins // shards)
+    scfg = TwinServerConfig(
+        merinda=MerindaConfig(n=system.spec.n, m=system.spec.m, order=3,
+                              dt=system.spec.dt, hidden=16, head_hidden=16,
+                              n_active=24),
+        max_twins=per_shard, refit_slots=8,
+        capacity=64, window=16, stride=8, windows_per_twin=4,
+        steps_per_tick=1, deploy_after=8, min_residency=4, max_residency=16,
+        guard=GuardConfig(window=24),
+        guard_budget=min(GUARD_BUDGET, per_shard),
+        scenario=ScenarioConfig(max_k=max(k, 32), ensemble=ensemble),
+        async_ingest=False, seed=seed)
+    srv = ShardedTwinServer(ShardedTwinConfig.uniform(
+        scfg, shards, rebalance_every=4))
+    # K elevator-fade counterfactuals: channel 0 ramps to a fraction of the
+    # input scale — the "what if authority degrades xx%" family of queries
+    fracs = np.linspace(0.1, 1.0, k, dtype=np.float32)
+    qus = np.zeros((k, horizon, system.spec.m), np.float32)
+    qus[:, :, 0] = (0.03 * fracs[:, None]
+                    * np.linspace(0.0, 1.0, horizon, dtype=np.float32))
+    try:
+        theta0 = system.true_theta(srv.shards[0].fleet.model.lib)
+        srv.deploy_many(list(range(n_twins)), theta0)
+
+        lat: list[float] = []
+        answered = 0
+        shrunk = refused = 0
+        qcursor = 0
+        wall = 0.0
+        for t in range(WARMUP + ticks):
+            lo = t * CHUNK
+            srv.ingest_many(
+                [(i, ys[i, lo:lo + CHUNK], us[i, lo:lo + CHUNK])
+                 for i in range(n_twins)])
+            if t == WARMUP - 2:
+                # compile the scenario shape before the stats reset
+                srv.drain()
+                srv.scenario(0, horizon, qus)
+            measured = t >= WARMUP
+            t0 = time.perf_counter()
+            if measured:
+                for _ in range(queries):
+                    tid = qcursor % n_twins
+                    qcursor += 1
+                    q0 = time.perf_counter()
+                    try:
+                        res = srv.scenario(tid, horizon, qus)
+                    except ScenarioRefused:
+                        refused += 1
+                        continue
+                    lat.append(time.perf_counter() - q0)
+                    answered += res.k
+                    shrunk += res.k < res.requested_k
+            srv.tick()
+            if measured:
+                wall += time.perf_counter() - t0
+            if t == WARMUP - 1:
+                srv.reset_latency_stats()
+        srv.drain()
+        s = srv.latency_summary()
+        lat_ms = np.asarray(lat) * 1e3 if lat else np.zeros((1,))
+        deadline_ms = s["deadline_s"] * 1e3
+        q_violations = int((lat_ms > deadline_ms).sum())
+        return {
+            "twins": n_twins, "shards": shards, "k": k, "horizon": horizon,
+            "queries": queries, "ensemble": ensemble, "ticks": s["ticks"],
+            "deadline_s": s["deadline_s"],
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
+            "tick_p50_ms": round(s["p50_ms"], 2),
+            "violations": s["violations"] + q_violations,
+            "scenarios_per_s": round(answered / max(wall, 1e-9), 1),
+            "shrunk": shrunk, "refused": refused,
+        }
+    finally:
+        srv.close()
+
+
+def run(quick: bool = True, smoke: bool = False) -> None:
+    if smoke:
+        sweeps = [(128, 2, 6, dict(k=8, horizon=20, queries=8))]
+    elif quick:
+        sweeps = [(1000, 2, 12, dict(k=8, horizon=20, queries=8)),
+                  (10000, 4, 12, dict(k=8, horizon=20, queries=8))]
+    else:
+        sweeps = [(1000, 2, 24, dict(k=8, horizon=20, queries=8)),
+                  (10000, 4, 24, dict(k=8, horizon=20, queries=8)),
+                  (10000, 4, 24, dict(k=16, horizon=40, queries=16))]
+    rows = [_serve_scenarios(n, s, t, **kw) for n, s, t, kw in sweeps]
+    for r in rows:
+        verdict = ("0 deadline violations" if r["violations"] == 0
+                   else f"{r['violations']} VIOLATIONS")
+        print(f"[scenarios] {r['twins']} twins / {r['shards']} shards: "
+              f"{r['scenarios_per_s']:.0f} scenarios/s "
+              f"(K={r['k']}, H={r['horizon']}, p50 {r['p50_ms']} ms) — "
+              f"{verdict}")
+    print_rows("what-if scenario serving under live load", rows)
+    path = write_csv("scenarios.csv", rows)
+    print(f"[scenarios] wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

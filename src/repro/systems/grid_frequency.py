@@ -1,0 +1,36 @@
+"""Single-area grid frequency dynamics (scenario-zoo system).
+
+The textbook swing-equation + governor model for one control area:
+frequency deviation f (Hz from nominal) and mechanical power deviation p,
+driven by a net load disturbance u (lost generation, demand steps):
+
+    M*df/dt  = p - D*f - u               (inertia vs damping vs imbalance)
+    tau*dp/dt = -p - f/R                 (governor droop response)
+
+Linear — deliberately: it pins the zoo's "easy identification, hard
+mission" corner.  The serving question is pure what-if: "if this feeder
+trips (u steps 0.2 pu), does frequency stay inside the load-shed band
+over the next 10 s?" — a grid operator's scenario query, answered with
+confidence bounds from the online-refit ensemble.
+"""
+from __future__ import annotations
+
+from repro.systems.base import DynamicalSystem, SystemSpec
+
+
+class GridFrequency(DynamicalSystem):
+    def __init__(self, M=8.0, D=1.0, R=0.08, tau=0.5):
+        self.p = (M, D, R, tau)
+        self.spec = SystemSpec(
+            name="grid_frequency", n=2, m=1, order=2,
+            dt=0.02, horizon=500,
+            y0_low=(-0.5, -0.5), y0_high=(0.5, 0.5),
+            input_kind="prbs", input_scale=0.3,
+        )
+
+    def rows(self):
+        M, D, R, tau = self.p
+        return [
+            {"y1": 1.0 / M, "y0": -D / M, "u0": -1.0 / M},
+            {"y1": -1.0 / tau, "y0": -1.0 / (R * tau)},
+        ]

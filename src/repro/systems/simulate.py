@@ -63,9 +63,12 @@ REGISTRY = {}
 def register_systems():
     """Populate the name -> constructor registry (import-cycle-free)."""
     from repro.systems.f8_crusader import F8Crusader
+    from repro.systems.grid_frequency import GridFrequency
     from repro.systems.lorenz import Lorenz
     from repro.systems.lotka_volterra import LotkaVolterra
     from repro.systems.pathogen import PathogenicAttack
+    from repro.systems.quadrotor import Quadrotor
+    from repro.systems.thermal_battery import ThermalBattery
     from repro.systems.van_der_pol import VanDerPol
 
     REGISTRY.update({
@@ -74,5 +77,8 @@ def register_systems():
         "f8_crusader": F8Crusader,
         "pathogenic_attack": PathogenicAttack,
         "van_der_pol": VanDerPol,
+        "quadrotor": Quadrotor,
+        "thermal_battery": ThermalBattery,
+        "grid_frequency": GridFrequency,
     })
     return REGISTRY

@@ -1,0 +1,38 @@
+"""Two-lump battery thermal model (scenario-zoo system).
+
+The classic core/surface lumped-capacitance model for a cylindrical cell,
+with temperatures expressed as DEVIATIONS from ambient (so the origin is
+the thermal equilibrium and the polynomial library needs no constant
+term).  Joule heating scales with current squared — the one nonlinearity:
+
+    dTc/dt = q*u^2 - k1*(Tc - Ts)        (I^2*R heating, core->surface)
+    dTs/dt = k1*(Tc - Ts) - k2*Ts        (conduction in, convection out)
+
+Order-2 polynomial with a pure-input quadratic term (`u0*u0`) — the only
+zoo system exercising that library column, which is exactly why it earns
+its slot: a twin fleet mixing flight dynamics with thermal management is
+the paper's "mission critical" setting (battery runaway is an ALERT).
+The what-if question writes itself: "what if this cell pulls 2x current
+for the next minute?"
+"""
+from __future__ import annotations
+
+from repro.systems.base import DynamicalSystem, SystemSpec
+
+
+class ThermalBattery(DynamicalSystem):
+    def __init__(self, q=1.8, k1=0.9, k2=0.5):
+        self.p = (q, k1, k2)
+        self.spec = SystemSpec(
+            name="thermal_battery", n=2, m=1, order=2,
+            dt=0.05, horizon=500,
+            y0_low=(0.0, 0.0), y0_high=(8.0, 4.0),
+            input_kind="prbs", input_scale=1.0,
+        )
+
+    def rows(self):
+        q, k1, k2 = self.p
+        return [
+            {"u0*u0": q, "y0": -k1, "y1": k1},
+            {"y0": k1, "y1": -(k1 + k2)},
+        ]

@@ -63,6 +63,13 @@ wire.py       The versioned wire format federation speaks: message
               framing, `IngestFrontDoor`/`FrontDoorClient`.  Framing
               internals are NOT a stable API (docs/API.md).
 
+scenario.py   `ScenarioRunner` — batched what-if rollouts: K counterfactual
+              input sequences per twin evaluated in ONE fused ensemble x K
+              device call against the recent-theta history, returning
+              center trajectories plus lo/hi confidence bounds.
+              `TwinServer.scenario()` serves it under the degradation
+              ladder (shrink K, then refuse) on all three servers.
+
 server.py     `TwinServer` — ties the loop together.  `ingest(twin_id, y, u)`
               stages telemetry; each `tick()` flushes to the rings, scores
               divergence, turns over slots, runs `steps_per_tick` fused
@@ -124,6 +131,8 @@ from repro.twin.recovery import (ChaosConfig, ChaosInjector,
                                  DegradationPolicy, RecoveryConfig,
                                  ShardFailure, TelemetryJournal,
                                  TwinCheckpointer)
+from repro.twin.scenario import (ScenarioConfig, ScenarioRefused,
+                                 ScenarioResult, ScenarioRunner, effective_k)
 from repro.twin.scheduler import (FederationConfig, PackedRefitScheduler,
                                   PriorityBuckets, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
@@ -151,6 +160,7 @@ _STABLE = [
     "FederatedTwinServer", "FederatedTwinConfig",
     "FrontDoorClient", "IngestFrontDoor",
     "GuardConfig", "GuardEvent",
+    "ScenarioConfig", "ScenarioResult", "ScenarioRefused",
     "RecoveryConfig", "ChaosConfig",
     "DegradationConfig", "DegradationEvent",
 ]
@@ -163,6 +173,7 @@ _STABLE = [
 _INTERNAL = [
     "FederationCoordinator", "ShardWorker",
     "DivergenceGuard", "GuardInstruments", "GuardRotation",
+    "ScenarioRunner", "effective_k",
     "FederationConfig", "PackedFleet", "PackedRefitScheduler",
     "PriorityBuckets", "RefitScheduler", "SchedulerConfig", "SchedulePlan",
     "SchedulerMetrics", "SlotFederation", "TwinRecord",

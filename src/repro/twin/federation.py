@@ -66,6 +66,7 @@ from repro.obs import MetricRegistry, Tracer
 from repro.twin.monitor import GuardEvent
 from repro.twin.recovery import TelemetryJournal, TwinCheckpointer, \
     ChaosInjector
+from repro.twin.scenario import ScenarioRefused, ScenarioResult
 from repro.twin.scheduler import SlotFederation
 from repro.twin.server import _HISTORY, TwinServer, TwinServerConfig
 from repro.twin.sharded import ShardedTickReport
@@ -153,7 +154,8 @@ def _worker_main(conn, scfg: TwinServerConfig, shard: int, recovery) -> None:
                     loss=None if rep.loss is None else float(rep.loss),
                     ckpt_tick=last_saved,
                     events=[[int(e.twin_id), e.kind, float(e.score),
-                             int(e.tick)] for e in rep.events])))
+                             int(e.tick), float(e.confidence)]
+                            for e in rep.events])))
             elif isinstance(msg, W.DrainCmd):
                 srv.drain()
                 conn.send_bytes(W.encode(W.Ack()))
@@ -168,6 +170,24 @@ def _worker_main(conn, scfg: TwinServerConfig, shard: int, recovery) -> None:
                 else:
                     conn.send_bytes(W.encode(W.PredictResult(
                         ys=np.asarray(ys))))
+            elif isinstance(msg, W.Scenario):
+                # ScenarioRefused is a RuntimeError: a refusal under
+                # deadline pressure rides the same error reply, and the
+                # coordinator re-raises the precise type from its message
+                try:
+                    res = srv.scenario(msg.twin_id, msg.horizon, msg.us,
+                                       k=msg.k)
+                except (KeyError, ValueError, RuntimeError) as e:
+                    conn.send_bytes(W.encode(W.ErrorMsg(
+                        where="scenario", error=str(e))))
+                else:
+                    conn.send_bytes(W.encode(W.ScenarioResult(
+                        twin_id=int(res.twin_id), horizon=int(res.horizon),
+                        requested_k=int(res.requested_k), k=int(res.k),
+                        degraded_level=int(res.degraded_level),
+                        ys=np.asarray(res.ys), lo=np.asarray(res.lo),
+                        hi=np.asarray(res.hi),
+                        confidence=np.asarray(res.confidence))))
             elif isinstance(msg, W.StatsCmd):
                 if msg.kind == "reset":
                     srv.reset_latency_stats()
@@ -470,6 +490,32 @@ class FederationCoordinator:
             self._mark_dead(w.shard)
             raise
 
+    def scenario(self, twin_id: int, horizon: int, us=None,
+                 k: int | None = None):
+        """What-if fan-out across the process boundary: the owning worker
+        answers from its live theta store at its OWN degradation level."""
+        w = self._live_worker(self.shard_of(twin_id))
+        try:
+            r = w.request(
+                W.Scenario(twin_id=int(twin_id), horizon=int(horizon),
+                           k=None if k is None else int(k),
+                           us=None if us is None
+                           else np.asarray(us, np.float32)),
+                W.ScenarioResult, self.cfg.tick_timeout_s)
+        except W.WireError as e:
+            msg = str(e)
+            if "scenario refused" in msg:
+                raise ScenarioRefused(msg) from e
+            raise RuntimeError(msg) from e
+        except (TimeoutError, EOFError):
+            self._mark_dead(w.shard)
+            raise
+        return ScenarioResult(twin_id=int(r.twin_id), horizon=int(r.horizon),
+                              requested_k=int(r.requested_k), k=int(r.k),
+                              degraded_level=int(r.degraded_level),
+                              ys=r.ys, lo=r.lo, hi=r.hi,
+                              confidence=r.confidence)
+
     # -- the supervisor tick -------------------------------------------- #
     def _alive(self) -> list[bool]:
         return [w.alive for w in self.workers]
@@ -575,7 +621,10 @@ class FederationCoordinator:
             deadline_met=latency <= self.deadline_s,
             reports=reports, grants=list(self.grants),
             events=[GuardEvent(twin_id=e[0], kind=e[1], score=e[2],
-                               tick=e[3])
+                               tick=e[3],
+                               # tolerate 4-tuple events from pre-confidence
+                               # workers (rolling upgrade across versions)
+                               confidence=e[4] if len(e) > 4 else 1.0)
                     for r in live for e in r.events],
             n_active=n_active,
             n_twins=sum(r.n_twins for r in live),

@@ -44,7 +44,7 @@ from repro.kernels.rk4.ops import rk4_poly_solve
 from repro.obs.registry import DEFAULT_SCORE_BUCKETS
 
 __all__ = ["GuardConfig", "GuardEvent", "GuardInstruments", "DivergenceGuard",
-           "GuardRotation"]
+           "GuardRotation", "score_confidence"]
 
 _BLOWUP_SCORE = 1e6     # score assigned to non-finite (unstable) rollouts
 
@@ -57,12 +57,26 @@ class GuardConfig:
     ema: float = 0.5                 # new-score weight in the EMA
 
 
+def score_confidence(score: float) -> float:
+    """Map a normalized divergence score to a confidence in (0, 1].
+
+    The guard's score is already a scale-free ratio (rollout error over
+    telemetry variance), so `1 / (1 + score)` gives a dimensionless trust
+    weight: ~1 while the model tracks, ~0 for a blown-up rollout.  The
+    same squash the scenario engine applies to its ensemble spread
+    (twin/scenario.py), so ALERT confidence and what-if confidence are
+    directly comparable on one dashboard axis.
+    """
+    return 1.0 / (1.0 + max(float(score), 0.0))
+
+
 @dataclass(frozen=True)
 class GuardEvent:
     twin_id: int
     kind: str        # "REFIT" | "ALERT"
     score: float
     tick: int
+    confidence: float = 1.0    # score_confidence(score); 1.0 = full trust
 
 
 @dataclass
@@ -174,9 +188,11 @@ class DivergenceGuard:
     def judge(self, twin_id: int, score: float, tick: int) -> GuardEvent | None:
         """Threshold an (already smoothed) score into an event, or None."""
         if score > self.cfg.alert_threshold:
-            return GuardEvent(twin_id, "ALERT", float(score), tick)
+            return GuardEvent(twin_id, "ALERT", float(score), tick,
+                              score_confidence(score))
         if score > self.cfg.refit_threshold:
-            return GuardEvent(twin_id, "REFIT", float(score), tick)
+            return GuardEvent(twin_id, "REFIT", float(score), tick,
+                              score_confidence(score))
         return None
 
 

@@ -65,6 +65,8 @@ from repro.twin.monitor import (DivergenceGuard, GuardConfig, GuardEvent,
 from repro.twin.packed import PackedFleet
 from repro.twin.recovery import (DegradationConfig, DegradationEvent,
                                  DegradationPolicy)
+from repro.twin.scenario import (ScenarioConfig, ScenarioRefused,
+                                 ScenarioResult, ScenarioRunner, effective_k)
 from repro.twin.service import DeadlineConfig
 from repro.twin.scheduler import (PackedRefitScheduler, RefitScheduler,
                                   SchedulerConfig, SchedulePlan,
@@ -121,6 +123,9 @@ class TwinServerConfig(DeadlineConfig):
     degradation: DegradationConfig = DegradationConfig()
                                       # deadline-aware shed ladder
                                       # (twin/recovery.py; disabled default)
+    scenario: ScenarioConfig = ScenarioConfig()
+                                      # what-if engine knobs
+                                      # (twin/scenario.py)
     staging_capacity: int | None = None
                                       # staging-buffer sample bound (None:
                                       # unbounded — the seed behaviour)
@@ -180,13 +185,16 @@ class TwinServer:
                     or src.cfg.windows_per_twin != cfg.windows_per_twin \
                     or src.cfg.lr != cfg.lr \
                     or src.cfg.sparsify_after != cfg.sparsify_after \
-                    or src.cfg.guard != cfg.guard:
+                    or src.cfg.guard != cfg.guard \
+                    or src.cfg.scenario != cfg.scenario:
                 raise ValueError("share_modules_from requires identical "
-                                 "fused-call shapes and guard config "
-                                 "(merinda/ring/fleet/guard cfg)")
-            # ring / fleet / guard are stateless (state passed explicitly);
-            # sharing the instances shares their jit caches across shards
+                                 "fused-call shapes and guard/scenario "
+                                 "config (merinda/ring/fleet cfg)")
+            # ring / fleet / guard / scenario runner are stateless (state
+            # passed explicitly); sharing the instances shares their jit
+            # caches across shards
             self.ring, self.fleet, self.guard = src.ring, src.fleet, src.guard
+            self.scenario_runner = src.scenario_runner
         else:
             self.ring = TelemetryRing(RingConfig(
                 slots=cfg.max_twins + 1, capacity=cfg.capacity, n=m.n, m=m.m))
@@ -197,6 +205,9 @@ class TwinServer:
             self.guard = DivergenceGuard(self.fleet.model.lib, m.dt,
                                          cfg.guard, use_pallas=m.use_pallas,
                                          interpret=m.interpret)
+            self.scenario_runner = ScenarioRunner(
+                self.fleet.model.lib, m.dt, cfg.scenario,
+                use_pallas=m.use_pallas, interpret=m.interpret)
         self._rstate = self.ring.init()
         self._key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         self._fstate = self.fleet.init(self._split())
@@ -255,6 +266,12 @@ class TwinServer:
         self._slot_twin: dict[int, int] = {}          # refit slot -> twin_id
         L = self.fleet.model.lib.size
         self._theta = jnp.zeros((cfg.max_twins + 1, m.n, L))
+        # per-twin ring of recently served thetas (scenario confidence
+        # ensemble); _hist_count tracks fills so unfilled slots fall back
+        # to the live model inside the fused rollout
+        self._theta_hist = jnp.zeros(
+            (cfg.max_twins + 1, cfg.scenario.ensemble, m.n, L))
+        self._hist_count = np.zeros((cfg.max_twins + 1,), np.int64)
         self._staging = StagingBuffer(capacity=cfg.staging_capacity)
         self._degradation = DegradationPolicy(cfg.degradation, cfg.deadline_s)
         self._pump = (BackgroundPump(self._prepare_timed,
@@ -343,6 +360,30 @@ class TwinServer:
             help="staged samples shed (drop-oldest) by non-strict ingest "
                  "backpressure", labels=lab)
         self._guard_obs = GuardInstruments.create(M, lab)
+        self._m_scn_latency = M.histogram(
+            "twin_scenario_latency_seconds",
+            help="what-if query wall latency (ensemble x K fused rollout)",
+            unit="seconds", labels=lab)
+        self._m_scn_requests = M.counter(
+            "twin_scenario_requests_total",
+            help="scenario queries answered", labels=lab)
+        self._m_scn_rollouts = M.counter(
+            "twin_scenario_rollouts_total",
+            help="individual trajectories integrated for scenario queries "
+                 "(effective K x ensemble)", labels=lab)
+        self._m_scn_shrunk = M.counter(
+            "twin_scenario_shrunk_total",
+            help="scenario queries served with K shrunk by the degradation "
+                 "ladder", labels=lab)
+        self._m_scn_refused = M.counter(
+            "twin_scenario_refused_total",
+            help="scenario queries refused under deadline pressure",
+            labels=lab)
+        self._m_scn_confidence = M.histogram(
+            "twin_scenario_confidence",
+            help="per-scenario ensemble confidence (1 = recent thetas "
+                 "agree)", bounds=(0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0),
+            labels=lab)
 
     # ------------------------------------------------------------------ #
     def _split(self):
@@ -549,11 +590,26 @@ class TwinServer:
         return self.scheduler.pressure(self.twin_snapshot())
 
     # ------------------------------------------------------------------ #
+    def _hist_push(self, rows: np.ndarray, thetas) -> None:
+        """Append served thetas to the per-twin history rings (one scatter).
+
+        rows [B] ring rows, thetas [B, n, L].  Every deploy/promote lands
+        here so the scenario ensemble always holds the `ensemble` most
+        recently SERVED models per twin — a cheap, always-fresh proxy for
+        model uncertainty (thrashing refits -> wide envelope).
+        """
+        pos = (self._hist_count[rows] % self.cfg.scenario.ensemble)
+        self._theta_hist = self._theta_hist.at[
+            jnp.asarray(rows), jnp.asarray(pos.astype(np.int32))].set(thetas)
+        self._hist_count[rows] += 1
+
     def deploy(self, twin_id: int, theta) -> None:
         """Install a theta for `twin_id` directly (warm start from an offline
         recovery — lets a fleet come up serving while online refits rotate)."""
         rec = self.register(twin_id)
-        self._theta = self._theta.at[rec.ring_slot].set(jnp.asarray(theta))
+        theta = jnp.asarray(theta)
+        self._theta = self._theta.at[rec.ring_slot].set(theta)
+        self._hist_push(np.asarray([rec.ring_slot], np.int64), theta[None])
         self._mark_deployed(rec)
         rec.samples_at_deploy = rec.samples
         self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
@@ -577,6 +633,7 @@ class TwinServer:
         if thetas.ndim == 2:
             thetas = jnp.broadcast_to(thetas, (len(recs),) + thetas.shape)
         self._theta = self._theta.at[jnp.asarray(rows)].set(thetas)
+        self._hist_push(rows.astype(np.int64), thetas)
         for rec in recs:
             self._mark_deployed(rec)
             rec.samples_at_deploy = rec.samples
@@ -765,6 +822,11 @@ class TwinServer:
                 self.packed.samples_at_deploy[rec.ring_slot] = rec.samples
         if promoted:
             self._theta = self._theta.at[jnp.asarray(targets)].set(thetas)
+            slots = sorted(promoted)
+            prows = np.asarray(
+                [self.twins[self._slot_twin[s]].ring_slot for s in slots],
+                np.int64)
+            self._hist_push(prows, thetas[jnp.asarray(slots)])
         for slot in promoted:
             rec = self.twins[self._slot_twin[slot]]
             self._mark_deployed(rec)
@@ -900,6 +962,72 @@ class TwinServer:
                              interpret=self.cfg.merinda.interpret)
         return out[0]
 
+    def scenario(self, twin_id: int, horizon: int, us=None,
+                 k: int | None = None) -> ScenarioResult:
+        """Answer a batched what-if query for one twin (twin/scenario.py).
+
+        `us` is [K, horizon, m] counterfactual input sequences (or
+        [horizon, m] for K=1; None = zero inputs, K from `k`).  Returns a
+        `ScenarioResult` whose center trajectories come from the LIVE theta
+        and whose lo/hi/confidence come from the recent-theta ensemble.
+        Under deadline pressure the degradation ladder deterministically
+        shrinks K (level >= shrink_level) or raises `ScenarioRefused`
+        (level >= refuse_level) before any device work is dispatched.
+
+        Serving-thread only, like `predict` (reads device ring state).
+        """
+        rec = self.twins[twin_id]
+        if not rec.deployed:
+            raise RuntimeError(f"twin {twin_id} has no deployed model")
+        if rec.samples < 1:
+            raise RuntimeError(f"twin {twin_id} has no telemetry to "
+                               "roll scenarios from")
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
+        scfg = self.cfg.scenario
+        m = self.cfg.merinda.m
+        if us is not None:
+            us = np.asarray(us, np.float32)
+            if us.ndim == 2:
+                us = us[None]
+            if us.ndim != 3 or us.shape[1] != horizon or us.shape[2] != m:
+                raise ValueError(f"us must be [K, {horizon}, {m}], "
+                                 f"got {us.shape}")
+            requested = us.shape[0] if k is None else int(k)
+            if requested > us.shape[0]:
+                raise ValueError(f"k {requested} exceeds provided "
+                                 f"sequences {us.shape[0]}")
+        else:
+            requested = 1 if k is None else int(k)
+        level = self._degradation.level
+        with self.tracer.span("scenario", twin=int(twin_id), k=requested,
+                              horizon=int(horizon), level=level):
+            t0 = time.perf_counter()
+            try:
+                eff = effective_k(requested, level, scfg)
+            except ScenarioRefused:
+                self._m_scn_refused.inc()
+                raise
+            if eff < requested:
+                self._m_scn_shrunk.inc()
+            us_eff = (np.zeros((eff, horizon, m), np.float32)
+                      if us is None else np.ascontiguousarray(us[:eff]))
+            ys, _ = self.ring.latest(self._rstate,
+                                     jnp.asarray([rec.ring_slot]), 0)
+            center, lo, hi, conf = self.scenario_runner.rollout(
+                self._theta_hist[rec.ring_slot],
+                int(self._hist_count[rec.ring_slot]),
+                ys[0, -1, :], us_eff)
+            self._m_scn_requests.inc()
+            self._m_scn_rollouts.inc(eff * scfg.ensemble)
+            for c in conf:
+                self._m_scn_confidence.observe(float(c))
+            self._m_scn_latency.observe(time.perf_counter() - t0)
+        return ScenarioResult(twin_id=int(twin_id), horizon=int(horizon),
+                              requested_k=requested, k=eff,
+                              degraded_level=level, ys=center, lo=lo, hi=hi,
+                              confidence=conf)
+
     # ------------------------------------------------------------------ #
     def reset_latency_stats(self) -> None:
         """Reset the measured-window stats (benchmarks call this after jit
@@ -1003,6 +1131,8 @@ class TwinServer:
             slot_twin_ids[slot] = tid
         return {
             "theta": self._theta,
+            "theta_hist": self._theta_hist,
+            "hist_count": self._hist_count.copy(),
             "rstate": self._rstate,
             "fstate": self._fstate,
             "key": self._key,
@@ -1029,6 +1159,8 @@ class TwinServer:
         guard-live set) is rebuilt from the packed columns + per-row extras.
         Serving-thread only; call before any post-restart ingest/tick."""
         self._theta = jnp.asarray(state["theta"])
+        self._theta_hist = jnp.asarray(state["theta_hist"])
+        self._hist_count[:] = np.asarray(state["hist_count"])
         self._rstate = jax.tree.map(jnp.asarray, state["rstate"])
         self._fstate = jax.tree.map(jnp.asarray, state["fstate"])
         self._key = jnp.asarray(state["key"])

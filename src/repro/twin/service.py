@@ -60,6 +60,11 @@ class TwinService(Protocol):
         before the call is visible to the next fused gather.
       * `predict` rolls the deployed model forward from the newest
         telemetry — the collision-avoidance lookahead.
+      * `scenario` answers a batched what-if query: K counterfactual input
+        sequences rolled forward from the newest telemetry with ensemble
+        confidence bounds (`twin/scenario.py`).  Under deadline pressure
+        the degradation ladder may deterministically shrink K or refuse
+        with `ScenarioRefused`.
       * `snapshot_state` returns a host pytree sufficient to rebuild the
         serving state (per-shard sub-trees for multi-shard services).
       * `close` releases background threads/processes; idempotent.
@@ -82,6 +87,9 @@ class TwinService(Protocol):
     def drain(self) -> None: ...
 
     def predict(self, twin_id: int, horizon: int, us=None): ...
+
+    def scenario(self, twin_id: int, horizon: int, us=None,
+                 k: int | None = None): ...
 
     def snapshot_state(self) -> dict: ...
 

@@ -279,6 +279,14 @@ class ShardedTwinServer:
         return self._shard_srv(self.shard_of(twin_id)).predict(twin_id,
                                                                horizon, us)
 
+    def scenario(self, twin_id: int, horizon: int, us=None,
+                 k: int | None = None):
+        """What-if fan-out: route to the owning shard; degradation shrink /
+        refuse happens at THAT shard's ladder level (a straggling shard
+        sheds its own scenario load without dimming the healthy shards)."""
+        return self._shard_srv(self.shard_of(twin_id)).scenario(
+            twin_id, horizon, us, k=k)
+
     # ------------------------------------------------------------------ #
     def _alive(self) -> list[bool]:
         return [srv is not None for srv in self.shards]

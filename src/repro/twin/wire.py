@@ -41,7 +41,8 @@ __all__ = [
     "WIRE_VERSION", "WireError", "encode", "decode",
     "read_frame", "write_frame",
     "Hello", "IngestBatch", "TickCmd", "TickDone", "Deploy",
-    "PredictCmd", "PredictResult", "DrainCmd", "Ack", "StatsCmd", "Stats",
+    "PredictCmd", "PredictResult", "Scenario", "ScenarioResult",
+    "DrainCmd", "Ack", "StatsCmd", "Stats",
     "SnapshotCmd", "SnapshotBlob", "Shutdown", "ErrorMsg",
     "IngestFrontDoor", "FrontDoorClient",
 ]
@@ -197,6 +198,40 @@ class PredictResult:
 
 @_message
 @dataclass
+class Scenario:
+    """Coordinator -> worker: batched what-if query for one twin.
+
+    `us` [K, horizon, m] counterfactual input sequences (None: zero
+    inputs, K taken from `k`).  The worker's OWN degradation level decides
+    shrink/refuse — the policy must live next to the ladder it reads."""
+    TYPE = "scenario"
+    _ARRAY_FIELDS = ("us",)
+    twin_id: int
+    horizon: int
+    k: int | None = None
+    us: np.ndarray | None = None
+
+
+@_message
+@dataclass
+class ScenarioResult:
+    """Worker -> coordinator: the flattened `twin.scenario.ScenarioResult`
+    (center trajectories + ensemble envelope + per-scenario confidence)."""
+    TYPE = "scenario_result"
+    _ARRAY_FIELDS = ("ys", "lo", "hi", "confidence")
+    twin_id: int
+    horizon: int
+    requested_k: int
+    k: int
+    degraded_level: int
+    ys: np.ndarray                     # [K, H+1, n] live-theta center
+    lo: np.ndarray                     # [K, H+1, n] ensemble lower envelope
+    hi: np.ndarray                     # [K, H+1, n] ensemble upper envelope
+    confidence: np.ndarray             # [K] in (0, 1]
+
+
+@_message
+@dataclass
 class DrainCmd:
     """Ingest barrier; worker replies Ack when staged samples hit rings."""
     TYPE = "drain"
@@ -282,8 +317,12 @@ def encode(msg) -> bytes:
             if val is None:
                 manifest.append([f.name, None, None])
             else:
+                # record the shape BEFORE ascontiguousarray: it promotes
+                # 0-d arrays to 1-d, which would corrupt the round trip
+                val = np.asarray(val)
+                shape = list(val.shape)
                 arr = np.ascontiguousarray(val)
-                manifest.append([f.name, str(arr.dtype), list(arr.shape)])
+                manifest.append([f.name, str(arr.dtype), shape])
                 blobs.append(arr.tobytes())
         else:
             header[f.name] = val
@@ -317,16 +356,32 @@ def decode(payload: bytes, *, trusted: bool = True):
                         "untrusted transport")
     kwargs = {}
     off = end
-    for name, dtype, shape in header.pop("a", []):
+    manifest = header.pop("a", [])
+    if not isinstance(manifest, list):
+        raise WireError("bad header: array manifest is not a list")
+    for entry in manifest:
+        try:
+            name, dtype, shape = entry
+        except (TypeError, ValueError) as e:
+            raise WireError(f"bad manifest entry: {entry!r}") from e
         if dtype is None:
             kwargs[name] = None
             continue
-        arr = np.dtype(dtype)
-        n = int(np.prod(shape, dtype=np.int64)) * arr.itemsize
-        if off + n > len(payload):
-            raise WireError(f"blob {name!r} overruns frame")
-        kwargs[name] = np.frombuffer(
-            payload[off:off + n], arr).reshape(shape)
+        # a flipped bit in the manifest must surface as WireError, not as
+        # numpy's TypeError/ValueError/OverflowError zoo
+        try:
+            arr = np.dtype(dtype)
+            n = int(np.prod(shape, dtype=np.int64)) * arr.itemsize
+            if n < 0:
+                raise WireError(f"blob {name!r} has negative size")
+            if off + n > len(payload):
+                raise WireError(f"blob {name!r} overruns frame")
+            kwargs[name] = np.frombuffer(
+                payload[off:off + n], arr).reshape(shape)
+        except WireError:
+            raise
+        except Exception as e:
+            raise WireError(f"bad blob {name!r}: {e!r}") from e
         off += n
     kwargs.update(header)
     try:

@@ -6,3 +6,6 @@ def pytest_configure(config):
     config.addinivalue_line("markers",
                             "dryrun: multi-device compile-only test")
     config.addinivalue_line("markers", "hypothesis: property-based test")
+    config.addinivalue_line("markers", "chaos: fault-injection recovery test")
+    config.addinivalue_line("markers",
+                            "scenario: what-if scenario-engine test")

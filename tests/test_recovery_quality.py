@@ -1,0 +1,134 @@
+"""Recovery quality as a TRACKED number: term-selection F1 per system.
+
+The suite's correctness tests are binary; this module makes recovery
+accuracy a trajectory.  For every registered system it fits the noisy-data
+STLSQ path (the serving stack's warm-start estimator) and scores the
+recovered support against the ground-truth library coefficients:
+
+    precision  |predicted ∩ true| / |predicted|
+    recall     |predicted ∩ true| / |true|
+    f1         harmonic mean — the gated column
+    mse        coefficient MSE on the true support (reported)
+
+Rows land in `bench_out/recovery_quality.csv` and are compared to the
+checked-in baseline by tools/check_bench.py (WARN-ONLY by design: this
+file exists to make the number visible, promoting it to a hard gate is
+the ROADMAP's recovery-quality item).  One additional `slow` row runs the
+full MERINDA trainer on Lotka-Volterra — the tracked number behind the
+known-failing seed xfail in tests/test_merinda.py — so the defect shows
+up as an F1 deficit in a CSV instead of only as an xfail marker.
+
+Each test also asserts a LOOSE floor (F1 >= 0.5 on clean-ish data) so a
+total identifiability collapse fails the default lane outright even
+without baselines.
+"""
+import csv
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.sparse_regression import stlsq
+from repro.data.pipeline import make_windows
+from repro.systems.simulate import register_systems, simulate_batch
+
+jax.config.update("jax_platform_name", "cpu")
+
+REGISTRY = register_systems()
+ALL_NAMES = sorted(REGISTRY)
+OUT = Path(__file__).resolve().parent.parent / "bench_out" \
+    / "recovery_quality.csv"
+
+NOISE = 0.002           # serving-bench telemetry noise level
+SUPPORT_ATOL = 0.02     # |coeff| above this counts as a selected term
+
+_ROWS: list[dict] = []
+
+
+def _score(theta, true):
+    pred = np.abs(np.asarray(theta)) > SUPPORT_ATOL
+    actual = np.abs(np.asarray(true)) > SUPPORT_ATOL
+    tp = int((pred & actual).sum())
+    precision = tp / max(int(pred.sum()), 1)
+    recall = tp / max(int(actual.sum()), 1)
+    f1 = (2 * precision * recall / (precision + recall)
+          if precision + recall else 0.0)
+    mse = float(np.mean((np.asarray(theta)[actual] - true[actual]) ** 2))
+    return precision, recall, f1, mse
+
+
+def _record(name, method, precision, recall, f1, mse):
+    _ROWS.append({"system": name, "method": method, "noise": NOISE,
+                  "precision": round(precision, 3),
+                  "recall": round(recall, 3),
+                  "f1": round(f1, 3), "mse": round(mse, 5)})
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _write_csv_at_teardown():
+    """Rows accumulate across the module; one CSV lands at the end (only
+    the rows that actually ran — check_bench skips absent identities)."""
+    yield
+    if _ROWS:
+        OUT.parent.mkdir(parents=True, exist_ok=True)
+        rows = sorted(_ROWS, key=lambda r: (r["system"], r["method"]))
+        with open(OUT, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_stlsq_recovery_f1(name):
+    """STLSQ on NOISY windows: the estimator the online warm-start path
+    actually runs.  Loose floor; the tracked number is the CSV."""
+    system = REGISTRY[name]()
+    tr = simulate_batch(system, jax.random.PRNGKey(2), batch=6,
+                        horizon=system.spec.horizon, noise_std=NOISE)
+    y_win, u_win = make_windows(tr.ys_noisy, tr.us, window=40, stride=11)
+    n, m, dt = system.spec.n, system.spec.m, system.spec.dt
+    dy = ((y_win[:, 2:, :] - y_win[:, :-2, :]) / (2 * dt)).reshape(-1, n)
+    y = y_win[:, 1:-1, :].reshape(-1, n)
+    u = u_win[:, 1:, :].reshape(y.shape[0], m)
+    lib = system.library()
+    phi = lib.eval(y, u if m else None)
+    theta = np.asarray(stlsq(phi, dy, threshold=0.02))
+    true = system.true_theta(lib)
+    precision, recall, f1, mse = _score(theta, true)
+    _record(name, "stlsq", precision, recall, f1, mse)
+    assert f1 >= 0.5, (
+        f"{name}: term-selection F1 {f1:.2f} collapsed (precision "
+        f"{precision:.2f}, recall {recall:.2f})")
+
+
+@pytest.mark.slow
+def test_merinda_recovery_f1_lotka_volterra():
+    """Full-trainer recovery on Lotka-Volterra — the number behind the
+    known-failing seed xfail (tests/test_merinda.py).  RECORDED, with only
+    a does-it-learn-anything floor: the CSV baseline is what tracks it."""
+    from repro.core.merinda import Merinda, MerindaConfig
+    from repro.core.trainer import fit
+    from repro.data.pipeline import WindowDataset
+    from repro.systems.lotka_volterra import LotkaVolterra
+
+    sys_ = LotkaVolterra()
+    tr = simulate_batch(sys_, jax.random.PRNGKey(0), batch=6, horizon=300)
+    ds = WindowDataset.from_trace(tr.ys_noisy, tr.us, tr.dt, window=40,
+                                  stride=10)
+    model = Merinda(MerindaConfig(n=sys_.spec.n, m=sys_.spec.m, order=2,
+                                  hidden=32, head_hidden=32, n_active=4,
+                                  dt=sys_.spec.dt, l1=2e-3))
+    params = model.init(jax.random.PRNGKey(1),
+                        model.norm_stats(ds.y_win, ds.u_win))
+    res = fit(model, params,
+              ds.batches(jax.random.PRNGKey(2), 64, epochs=400),
+              steps=700, lr=5e-3, sparsify_after=0.6)
+    theta = model.recover(res.params, ds.y_win[:200], ds.u_win[:200])
+    true = sys_.true_theta(model.lib)
+    precision, recall, f1, mse = _score(theta, true)
+    _record("lotka_volterra", "merinda", precision, recall, f1, mse)
+    # one wrong support term (the tracked defect) still scores ~0.75;
+    # anything below half means the trainer stopped learning, which is a
+    # different (new) failure
+    assert f1 >= 0.5 and np.isfinite(mse)

@@ -1,0 +1,275 @@
+"""Scenario engine unit + integration tests (src/repro/twin/scenario.py).
+
+Covers the pure pieces (config validation, the deterministic degradation
+ladder in `effective_k`, runner envelope math) and the `TwinServer`
+integration surface: result shapes, input validation, the theta-history
+confidence ensemble, snapshot/restore of the history ring, and the
+shrink/refuse behavior under the `DegradationPolicy` ladder.  Cross-server
+conformance (single vs sharded vs federated) lives in
+tests/test_service_conformance.py.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.merinda import MerindaConfig
+from repro.systems.simulate import simulate_batch
+from repro.systems.van_der_pol import VanDerPol
+from repro.twin.monitor import GuardConfig
+from repro.twin.scenario import (ScenarioConfig, ScenarioRefused,
+                                 ScenarioRunner, effective_k)
+from repro.twin.server import TwinServer, TwinServerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.scenario
+
+
+# --------------------------------------------------------------------- #
+# config + ladder (pure, no device work)
+# --------------------------------------------------------------------- #
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ScenarioConfig(max_k=0)
+    with pytest.raises(ValueError):
+        ScenarioConfig(ensemble=0)
+    with pytest.raises(ValueError):
+        ScenarioConfig(degraded_shrink=1)
+    with pytest.raises(ValueError):
+        ScenarioConfig(shrink_level=0)
+    with pytest.raises(ValueError):
+        ScenarioConfig(shrink_level=3, refuse_level=2)
+
+
+def test_effective_k_ladder():
+    cfg = ScenarioConfig(max_k=16, shrink_level=2, degraded_shrink=4,
+                         refuse_level=3)
+    assert effective_k(8, 0, cfg) == 8          # healthy: passthrough
+    assert effective_k(8, 1, cfg) == 8          # below shrink_level
+    assert effective_k(8, 2, cfg) == 2          # 8 // 4
+    assert effective_k(3, 2, cfg) == 1          # floor at 1, never 0
+    with pytest.raises(ScenarioRefused, match="^scenario refused"):
+        effective_k(8, 3, cfg)
+    with pytest.raises(ScenarioRefused):
+        effective_k(1, 5, cfg)                  # any level past refuse
+    with pytest.raises(ValueError):
+        effective_k(0, 0, cfg)
+    with pytest.raises(ValueError):
+        effective_k(17, 0, cfg)                 # over max_k
+
+
+# --------------------------------------------------------------------- #
+# runner envelope math (direct, no server)
+# --------------------------------------------------------------------- #
+def _runner(sys_, ensemble=4):
+    lib = sys_.library()
+    return ScenarioRunner(lib, sys_.spec.dt,
+                          ScenarioConfig(max_k=8, ensemble=ensemble)), lib
+
+
+def test_runner_envelope_contains_center():
+    sys_ = VanDerPol()
+    runner, lib = _runner(sys_)
+    theta = np.asarray(sys_.true_theta(lib), np.float32)
+    hist = np.stack([theta * (1.0 + 0.05 * i) for i in range(4)])
+    y0 = np.asarray([0.5, -0.3], np.float32)
+    us = np.zeros((3, 20, 1), np.float32)
+    us[:, :, 0] = np.linspace(0.1, 0.3, 3)[:, None]
+    center, lo, hi, conf = runner.rollout(hist, 4, y0, us)
+    assert center.shape == lo.shape == hi.shape == (3, 21, 2)
+    assert conf.shape == (3,)
+    assert (lo <= center + 1e-6).all() and (center <= hi + 1e-6).all()
+    assert ((0.0 < conf) & (conf <= 1.0)).all()
+
+
+def test_runner_single_deploy_degenerate_envelope():
+    """count=1: unfilled ring slots fall back to the live theta, so the
+    envelope collapses to the center and confidence is 1."""
+    sys_ = VanDerPol()
+    runner, lib = _runner(sys_)
+    theta = np.asarray(sys_.true_theta(lib), np.float32)
+    hist = np.zeros((4,) + theta.shape, np.float32)
+    hist[0] = theta                              # only slot 0 is real
+    y0 = np.asarray([0.5, -0.3], np.float32)
+    us = np.zeros((2, 10, 1), np.float32)
+    center, lo, hi, conf = runner.rollout(hist, 1, y0, us)
+    np.testing.assert_allclose(lo, center, atol=1e-6)
+    np.testing.assert_allclose(hi, center, atol=1e-6)
+    np.testing.assert_allclose(conf, 1.0, atol=1e-5)
+
+
+def test_runner_confidence_decreases_with_spread():
+    """Wider theta disagreement -> wider envelope -> lower confidence."""
+    sys_ = VanDerPol()
+    runner, lib = _runner(sys_)
+    theta = np.asarray(sys_.true_theta(lib), np.float32)
+    y0 = np.asarray([0.5, -0.3], np.float32)
+    us = np.zeros((1, 20, 1), np.float32)
+    confs = []
+    for jitter in (0.0, 0.05, 0.25):
+        hist = np.stack([theta * (1.0 + jitter * i) for i in range(4)])
+        *_, conf = runner.rollout(hist, 4, y0, us)
+        confs.append(float(conf[0]))
+    assert confs[0] > confs[1] > confs[2]
+    assert confs[0] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_runner_rejects_bad_us_rank():
+    sys_ = VanDerPol()
+    runner, lib = _runner(sys_)
+    theta = np.asarray(sys_.true_theta(lib), np.float32)
+    hist = np.broadcast_to(theta, (4,) + theta.shape)
+    with pytest.raises(ValueError, match="us must be"):
+        runner.rollout(hist, 1, np.zeros(2, np.float32),
+                       np.zeros((10, 1), np.float32))
+
+
+# --------------------------------------------------------------------- #
+# server integration
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def vdp_world():
+    sys_ = VanDerPol()
+    tr = simulate_batch(sys_, jax.random.PRNGKey(0), batch=3, horizon=200,
+                        noise_std=0.002)
+    return sys_, np.asarray(tr.ys_noisy), np.asarray(tr.us)
+
+
+def _server(sys_, **kw):
+    d = dict(
+        merinda=MerindaConfig(n=2, m=1, order=sys_.spec.order, hidden=8,
+                              head_hidden=8, n_active=8, dt=sys_.spec.dt),
+        max_twins=6, refit_slots=2, capacity=128, window=16, stride=8,
+        windows_per_twin=4, steps_per_tick=1, deploy_after=2,
+        min_residency=2, max_residency=6,
+        guard=GuardConfig(window=16),
+        scenario=ScenarioConfig(max_k=8, ensemble=4))
+    d.update(kw)
+    return TwinServer(TwinServerConfig(**d))
+
+
+def _warm(srv, sys_, ys, us, n=2, chunks=3):
+    theta = sys_.true_theta(srv.fleet.model.lib)
+    for i in range(n):
+        srv.register(i)
+        srv.deploy(i, theta)
+        for t in range(chunks):
+            srv.ingest(i, ys[i, t * 10:(t + 1) * 10],
+                       us[i, t * 10:(t + 1) * 10])
+    srv.tick()
+    return theta
+
+
+def test_server_scenario_shapes_and_bounds(vdp_world):
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    _warm(srv, sys_, ys, us)
+    qus = np.zeros((4, 15, 1), np.float32)
+    qus[:, :, 0] = np.linspace(-0.2, 0.2, 4)[:, None]
+    res = srv.scenario(0, 15, qus)
+    assert res.twin_id == 0 and res.horizon == 15
+    assert res.requested_k == res.k == 4 and res.degraded_level == 0
+    assert res.ys.shape == res.lo.shape == res.hi.shape == (4, 16, 2)
+    assert res.confidence.shape == (4,)
+    assert (res.lo <= res.ys + 1e-6).all() and (res.ys <= res.hi + 1e-6).all()
+    assert np.isfinite(res.ys).all()
+
+
+def test_server_scenario_input_surface(vdp_world):
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    _warm(srv, sys_, ys, us)
+    # 2-D us promotes to K=1
+    res = srv.scenario(0, 10, np.zeros((10, 1), np.float32))
+    assert res.k == 1 and res.ys.shape == (1, 11, 2)
+    # us=None + k: zero-input counterfactuals
+    res = srv.scenario(0, 10, k=3)
+    assert res.k == 3
+    # k may select a prefix of the provided sequences, never more
+    res = srv.scenario(0, 10, np.zeros((4, 10, 1), np.float32), k=2)
+    assert res.k == 2
+    with pytest.raises(ValueError):
+        srv.scenario(0, 10, np.zeros((2, 10, 1), np.float32), k=3)
+    with pytest.raises(ValueError):
+        srv.scenario(0, 10, np.zeros((2, 9, 1), np.float32))   # H mismatch
+    with pytest.raises(ValueError):
+        srv.scenario(0, 0)
+    with pytest.raises(KeyError):
+        srv.scenario(99, 10)
+
+
+def test_server_scenario_requires_deploy_and_telemetry(vdp_world):
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    srv.register(0)
+    with pytest.raises(RuntimeError, match="no deployed model"):
+        srv.scenario(0, 10)
+    srv.deploy(0, sys_.true_theta(srv.fleet.model.lib))
+    with pytest.raises(RuntimeError, match="no telemetry"):
+        srv.scenario(0, 10)
+
+
+def test_server_degradation_ladder(vdp_world):
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    _warm(srv, sys_, ys, us)
+    qus = np.zeros((8, 10, 1), np.float32)
+    srv._degradation.level = 2
+    res = srv.scenario(0, 10, qus)
+    assert res.requested_k == 8 and res.k == 2     # 8 // degraded_shrink(4)
+    assert res.degraded_level == 2
+    srv._degradation.level = 3
+    with pytest.raises(ScenarioRefused):
+        srv.scenario(0, 10, qus)
+    srv._degradation.level = 0
+    assert srv.scenario(0, 10, qus).k == 8         # recovers fully
+
+
+def test_server_theta_hist_survives_snapshot(vdp_world):
+    """The confidence ensemble is state: snapshot/restore must reproduce
+    the exact scenario answer, envelope included."""
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    theta = _warm(srv, sys_, ys, us)
+    # push history: redeploys widen the ensemble
+    for j in (0.02, 0.05):
+        srv.deploy(0, np.asarray(theta) * (1.0 + j))
+    qus = np.zeros((2, 12, 1), np.float32)
+    before = srv.scenario(0, 12, qus)
+    assert int(srv._hist_count[srv.twins[0].ring_slot]) == 3
+    state = srv.snapshot_state()
+
+    srv2 = _server(sys_)
+    srv2.restore_state(state)
+    after = srv2.scenario(0, 12, qus)
+    np.testing.assert_allclose(after.ys, before.ys, rtol=1e-6)
+    np.testing.assert_allclose(after.lo, before.lo, rtol=1e-6)
+    np.testing.assert_allclose(after.hi, before.hi, rtol=1e-6)
+    np.testing.assert_allclose(after.confidence, before.confidence,
+                               rtol=1e-6)
+
+
+def test_server_confidence_tracks_redeploy_churn(vdp_world):
+    sys_, ys, us = vdp_world
+    srv = _server(sys_)
+    theta = _warm(srv, sys_, ys, us)
+    calm = srv.scenario(0, 12, k=1)
+    for j in (0.1, 0.2, 0.3):                      # thrash the model
+        srv.deploy(0, np.asarray(theta) * (1.0 + j))
+    churned = srv.scenario(0, 12, k=1)
+    assert float(churned.confidence[0]) < float(calm.confidence[0])
+    assert (churned.hi - churned.lo).mean() > (calm.hi - calm.lo).mean()
+
+
+@pytest.mark.slow
+def test_server_scenario_k_large(vdp_world):
+    """max_k-wide query: one fused dispatch, all envelopes ordered."""
+    sys_, ys, us = vdp_world
+    srv = _server(sys_, scenario=ScenarioConfig(max_k=32, ensemble=4))
+    _warm(srv, sys_, ys, us)
+    qus = np.zeros((32, 30, 1), np.float32)
+    qus[:, :, 0] = np.linspace(-0.3, 0.3, 32)[:, None]
+    res = srv.scenario(0, 30, qus)
+    assert res.k == 32 and res.ys.shape == (32, 31, 2)
+    assert (res.lo <= res.hi + 1e-6).all()
+    assert np.isfinite(res.confidence).all()

@@ -15,6 +15,8 @@ columnar `IngestBatch` framing, `Deploy` frames, tick fan-out/collect, and
 event reconstruction from `TickDone` — if any of it bends the data, this
 suite sees a different event stream.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -22,9 +24,10 @@ import pytest
 from repro.core.merinda import MerindaConfig
 from repro.systems.lotka_volterra import LotkaVolterra
 from repro.systems.simulate import simulate_batch
-from repro.twin import (FederatedTwinConfig, FederatedTwinServer,
-                        GuardConfig, ShardedTwinConfig, ShardedTwinServer,
-                        TwinServer, TwinServerConfig, TwinService, conforms)
+from repro.twin import (DegradationConfig, FederatedTwinConfig,
+                        FederatedTwinServer, GuardConfig, ScenarioRefused,
+                        ShardedTwinConfig, ShardedTwinServer, TwinServer,
+                        TwinServerConfig, TwinService, conforms)
 
 N_TWINS = 8
 DAMAGED = {2, 5}
@@ -162,6 +165,130 @@ def test_sample_accounting_identical(lv_world):
             srv.close()
 
 
+# --------------------------------------------------------------------- #
+# scenario conformance: the what-if answer is part of the protocol
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def scenario_answers(lv_world):
+    """Identical deploy history + telemetry on each implementation, then
+    the same what-if query — the answers (center, envelope, confidence)
+    must match to f32 tolerance across the process/wire boundary."""
+    sys_, ys = lv_world
+    cfg = _base_cfg(sys_)
+    true = np.asarray(sys_.true_theta(cfg.merinda.library))
+    out = {}
+    for impl in IMPLS:
+        srv = _make(impl, cfg)
+        try:
+            for tid in range(N_TWINS):
+                srv.register(tid)
+            srv.deploy_many(list(range(N_TWINS)),
+                            np.stack([true] * N_TWINS))
+            for t in range(3):
+                srv.ingest_many(
+                    [(tid, ys[tid, t * PER_TICK:(t + 1) * PER_TICK])
+                     for tid in range(N_TWINS)])
+                srv.tick()
+            # a second deploy widens the confidence ensemble identically
+            srv.deploy_many(list(range(N_TWINS)),
+                            np.stack([true * 1.05] * N_TWINS))
+            srv.drain()
+            out[impl] = {tid: srv.scenario(tid, 12, k=3)
+                         for tid in (0, 1, 5)}
+        finally:
+            srv.close()
+    return out
+
+
+@pytest.mark.parametrize("impl", [i for i in IMPLS if i != "single"])
+def test_scenario_results_identical_across_implementations(scenario_answers,
+                                                           impl):
+    for tid, ref in scenario_answers["single"].items():
+        got = scenario_answers[impl][tid]
+        assert (got.twin_id, got.horizon, got.requested_k, got.k,
+                got.degraded_level) == (ref.twin_id, ref.horizon,
+                                        ref.requested_k, ref.k,
+                                        ref.degraded_level)
+        for f in ("ys", "lo", "hi", "confidence"):
+            np.testing.assert_allclose(getattr(got, f), getattr(ref, f),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"{impl} twin {tid} {f}")
+
+
+def test_scenario_envelope_sane(scenario_answers):
+    """The two-deploy history must produce a REAL envelope (not the
+    degenerate single-theta band), on every implementation."""
+    for impl, answers in scenario_answers.items():
+        res = answers[0]
+        assert (res.hi - res.lo).max() > 0, f"{impl}: degenerate envelope"
+        assert (res.confidence < 1.0).all(), f"{impl}: confidence stuck at 1"
+        assert (res.lo <= res.ys + 1e-6).all()
+        assert (res.ys <= res.hi + 1e-6).all()
+
+
+def _ladder_cfgs(sys_):
+    """Shard 0 under an impossible deadline with fast escalation — its
+    OWN ladder must shrink/refuse scenarios; shard 1 stays healthy."""
+    base = _base_cfg(sys_)
+    degraded = dataclasses.replace(
+        base, deadline_s=1e-4,
+        degradation=DegradationConfig(enabled=True, hold_ticks=1))
+    return (degraded, base)
+
+
+@pytest.mark.parametrize("impl", ["sharded", "federated"])
+def test_scenario_degraded_ladder_is_per_shard(lv_world, impl):
+    """Deadline pressure on ONE shard refuses ITS twins' scenarios while
+    the other shard answers at full K — including across the federation
+    wire, where `ScenarioRefused` must survive the ErrorMsg round trip."""
+    sys_, ys = lv_world
+    cfgs = _ladder_cfgs(sys_)
+    srv = (ShardedTwinServer(ShardedTwinConfig(servers=cfgs))
+           if impl == "sharded"
+           else FederatedTwinServer(FederatedTwinConfig(servers=cfgs)))
+    try:
+        true = np.asarray(sys_.true_theta(cfgs[0].merinda.library))
+        for tid in range(N_TWINS):
+            srv.register(tid)
+        srv.deploy_many(list(range(N_TWINS)), np.stack([true] * N_TWINS))
+        for t in range(8):                 # every tick misses 0.1 ms: the
+            srv.ingest_many(               # ladder climbs one level per tick
+                [(tid, ys[tid, t * PER_TICK:(t + 1) * PER_TICK])
+                 for tid in range(N_TWINS)])
+            srv.tick()
+        srv.drain()
+        with pytest.raises(ScenarioRefused):
+            srv.scenario(0, 10, k=4)       # twin 0 -> shard 0 (degraded)
+        res = srv.scenario(1, 10, k=4)     # twin 1 -> shard 1 (healthy)
+        assert res.k == res.requested_k == 4 and res.degraded_level == 0
+    finally:
+        srv.close()
+
+
+def test_scenario_shrink_is_deterministic_across_shards(lv_world):
+    """At shrink_level the SAME query gets the SAME reduced K on any
+    shard (deterministic shrink, not sampling — the conformance property
+    that keeps multi-shard answers reproducible)."""
+    sys_, ys = lv_world
+    cfg = _base_cfg(sys_)
+    srv = ShardedTwinServer(ShardedTwinConfig.uniform(cfg, 2))
+    try:
+        true = np.asarray(sys_.true_theta(cfg.merinda.library))
+        for tid in range(N_TWINS):
+            srv.register(tid)
+        srv.deploy_many(list(range(N_TWINS)), np.stack([true] * N_TWINS))
+        srv.ingest_many([(tid, ys[tid, :PER_TICK])
+                         for tid in range(N_TWINS)])
+        srv.tick()
+        srv.drain()
+        for shard in srv.shards:
+            shard._degradation.level = 2
+        ks = {srv.scenario(tid, 10, k=8).k for tid in range(N_TWINS)}
+        assert ks == {2}                   # 8 // degraded_shrink(4), always
+    finally:
+        srv.close()
+
+
 def test_federation_config_deprecated_kwargs():
     """Satellite of the config consolidation: old `FederationConfig`
     kwargs keep working for one release, warning, and route to the new
@@ -187,4 +314,5 @@ def test_conforms_reports_missing_surface():
 
     missing = conforms(Half())
     assert "tick" in missing and "ingest_many" in missing
+    assert "scenario" in missing          # the what-if surface is protocol
     assert "ingest" not in missing

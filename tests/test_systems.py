@@ -1,4 +1,7 @@
-"""System correctness: hand-coded rhs vs library form + identifiability."""
+"""System correctness: hand-coded rhs vs library form, identifiability,
+and the registry-wide invariant suite (every REGISTERED system must pass
+finiteness / equilibrium / simulate-contract checks — and must DECLARE its
+invariants below, so adding a system without them fails collection)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,16 +10,55 @@ import pytest
 from repro.core.sparse_regression import stlsq
 from repro.data.pipeline import make_windows
 from repro.systems.f8_crusader import F8Crusader
+from repro.systems.grid_frequency import GridFrequency
 from repro.systems.lorenz import Lorenz
 from repro.systems.lotka_volterra import LotkaVolterra
 from repro.systems.pathogen import PathogenicAttack
+from repro.systems.quadrotor import Quadrotor
 from repro.systems.simulate import register_systems, simulate, simulate_batch
+from repro.systems.thermal_battery import ThermalBattery
 from repro.systems.van_der_pol import VanDerPol
 
 jax.config.update("jax_platform_name", "cpu")
 
 SYSTEMS = [LotkaVolterra(), Lorenz(), F8Crusader(), PathogenicAttack(),
            VanDerPol()]
+
+REGISTRY = register_systems()
+ALL_NAMES = sorted(REGISTRY)
+
+# ------------------------------------------------------------------------- #
+# Per-system invariant declarations.  EVERY registered system must appear:
+# a known equilibrium (y*, u*) with rhs(y*, u*) == 0, and a bound on |y|
+# over the documented initial-condition domain under default excitation.
+# Registering a system without declaring its invariants fails the suite
+# (test_every_registered_system_declares_invariants).
+# ------------------------------------------------------------------------- #
+EQUILIBRIA = {
+    # name: (y_star, u_star) — all zoo systems have no constant library
+    # term, so the origin is an equilibrium under zero input; systems with
+    # a second analytic fixed point declare it too.
+    "lotka_volterra": [(np.zeros(2), None)],
+    "lorenz": [(np.zeros(3), None)],
+    "f8_crusader": [(np.zeros(3), np.zeros(1))],
+    "van_der_pol": [(np.zeros(2), np.zeros(1))],
+    "pathogenic_attack": [(np.zeros(2), np.zeros(1))],
+    "quadrotor": [(np.zeros(3), np.zeros(1))],
+    "thermal_battery": [(np.zeros(2), np.zeros(1))],
+    "grid_frequency": [(np.zeros(2), np.zeros(1))],
+}
+TRACE_BOUND = {
+    # max |y| over a default-excitation batch from the documented domain —
+    # loose (2-5x observed) but finite: catches silent blowups
+    "lotka_volterra": 100.0,
+    "lorenz": 80.0,
+    "f8_crusader": 10.0,
+    "van_der_pol": 20.0,
+    "pathogenic_attack": 20.0,
+    "quadrotor": 80.0,
+    "thermal_battery": 20.0,
+    "grid_frequency": 10.0,
+}
 
 
 def test_lorenz_rhs_matches_handcoded():
@@ -100,3 +142,152 @@ def test_noise_injection_scales():
     tr = simulate(s, jax.random.PRNGKey(3), horizon=200, noise_std=0.05)
     resid = np.asarray(tr.ys_noisy - tr.ys)
     assert 0.0 < resid.std() < 1.0
+
+
+# ------------------------------------------------------------------------- #
+# New-zoo hand-derived rhs checks (rows() vs physics, like Lorenz/F-8/VdP)
+# ------------------------------------------------------------------------- #
+def test_quadrotor_rhs_matches_handcoded():
+    s = Quadrotor(tau=8.0, d1=0.6, d3=0.4, g=9.81, c=0.35)
+    y = jnp.asarray([[0.2, -0.3, 0.1]])
+    u = jnp.asarray([[0.15]])
+    phi, p, vy, uu = 0.2, -0.3, 0.1, 0.15
+    expect = [p,
+              8.0 * uu - 0.6 * p - 0.4 * p ** 3,
+              9.81 * phi - 0.35 * vy]
+    np.testing.assert_allclose(np.asarray(s.rhs(y, u))[0], expect, rtol=1e-5)
+
+
+def test_thermal_battery_rhs_matches_handcoded():
+    s = ThermalBattery(q=1.8, k1=0.9, k2=0.5)
+    y = jnp.asarray([[3.0, 1.5]])
+    u = jnp.asarray([[0.8]])
+    tc, ts, uu = 3.0, 1.5, 0.8
+    expect = [1.8 * uu * uu - 0.9 * (tc - ts),
+              0.9 * (tc - ts) - 0.5 * ts]
+    np.testing.assert_allclose(np.asarray(s.rhs(y, u))[0], expect, rtol=1e-5)
+
+
+def test_grid_frequency_rhs_matches_handcoded():
+    M, D, R, tau = 8.0, 1.0, 0.08, 0.5
+    s = GridFrequency(M=M, D=D, R=R, tau=tau)
+    y = jnp.asarray([[0.2, -0.1]])
+    u = jnp.asarray([[0.3]])
+    f, p, uu = 0.2, -0.1, 0.3
+    expect = [(p - D * f - uu) / M, (-p - f / R) / tau]
+    np.testing.assert_allclose(np.asarray(s.rhs(y, u))[0], expect, rtol=1e-5)
+
+
+def test_grid_frequency_droop_steady_state():
+    """Physics invariant: a constant load step settles at the analytic
+    droop frequency f* = -u*R / (D*R + 1) — the number a grid operator's
+    what-if query is really asking for."""
+    M, D, R, tau = 8.0, 1.0, 0.08, 0.5
+    s = GridFrequency(M=M, D=D, R=R, tau=tau)
+    u_step = 0.2
+    dt, steps = s.spec.dt, 2000
+    y = jnp.zeros((1, 2))
+    u = jnp.asarray([[u_step]])
+    for _ in range(steps):        # forward Euler is fine for a settling test
+        y = y + dt * s.rhs(y, u)
+    f_star = -u_step * R / (D * R + 1.0)
+    np.testing.assert_allclose(float(y[0, 0]), f_star, rtol=1e-2)
+
+
+def test_thermal_battery_steady_state():
+    """Constant current settles at the analytic two-lump equilibrium."""
+    q, k1, k2 = 1.8, 0.9, 0.5
+    s = ThermalBattery(q=q, k1=k1, k2=k2)
+    i_const = 0.7
+    dt = s.spec.dt
+    y = jnp.zeros((1, 2))
+    u = jnp.asarray([[i_const]])
+    for _ in range(1500):
+        y = y + dt * s.rhs(y, u)
+    heat = q * i_const ** 2
+    ts_star = heat / k2                       # all heat leaves by convection
+    tc_star = ts_star + heat / k1
+    np.testing.assert_allclose(np.asarray(y)[0], [tc_star, ts_star],
+                               rtol=1e-2)
+
+
+# ------------------------------------------------------------------------- #
+# Registry-wide invariant suite: parametrized over ALL registered systems,
+# so a new system is covered the moment it is registered — and fails the
+# declaration check until its invariants are written down above.
+# ------------------------------------------------------------------------- #
+def test_every_registered_system_declares_invariants():
+    missing = [n for n in ALL_NAMES
+               if n not in EQUILIBRIA or n not in TRACE_BOUND]
+    assert not missing, (
+        f"systems registered without declared invariants: {missing} — add "
+        "EQUILIBRIA and TRACE_BOUND entries in tests/test_systems.py")
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_registry_rhs_finite_on_domain(name):
+    """rhs stays finite over a dense sample of the DOCUMENTED domain
+    (spec.y0_low/high x input_scale) — the domain the scenario engine
+    rolls from."""
+    s = REGISTRY[name]()
+    key = jax.random.PRNGKey(7)
+    ky, ku = jax.random.split(key)
+    y = s.sample_y0(ky, (256,))
+    u = (jax.random.uniform(ku, (256, s.spec.m), minval=-1.0, maxval=1.0)
+         * s.spec.input_scale) if s.spec.m else None
+    dy = np.asarray(s.rhs(y, u))
+    assert dy.shape == (256, s.spec.n)
+    assert np.isfinite(dy).all(), f"{name}: non-finite rhs on its domain"
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_registry_equilibria(name):
+    """Declared fixed points are actual fixed points of rows()."""
+    s = REGISTRY[name]()
+    for y_star, u_star in EQUILIBRIA[name]:
+        y = jnp.asarray(y_star, jnp.float32)[None]
+        u = None if u_star is None else jnp.asarray(u_star,
+                                                    jnp.float32)[None]
+        dy = np.asarray(s.rhs(y, u))
+        np.testing.assert_allclose(dy, 0.0, atol=1e-6,
+                                   err_msg=f"{name}: rhs != 0 at declared "
+                                           f"equilibrium {y_star}")
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_registry_simulate_contract(name):
+    """simulate_batch round trip: shapes, dtypes, finiteness, and the
+    declared trajectory bound under default excitation."""
+    s = REGISTRY[name]()
+    tr = simulate_batch(s, jax.random.PRNGKey(11), batch=4, horizon=200,
+                        noise_std=0.01)
+    assert tr.ys.shape == (4, 201, s.spec.n)
+    assert tr.ys_noisy.shape == tr.ys.shape
+    assert tr.us.shape == (4, 200, s.spec.m)
+    assert tr.ys.dtype == jnp.float32 and tr.us.dtype == jnp.float32
+    assert tr.dt == s.spec.dt > 0
+    ys = np.asarray(tr.ys)
+    assert np.isfinite(ys).all(), f"{name}: non-finite trace"
+    assert np.abs(ys).max() <= TRACE_BOUND[name], (
+        f"{name}: |y| max {np.abs(ys).max():.1f} exceeds declared bound "
+        f"{TRACE_BOUND[name]}")
+    assert len(s.spec.y0_low) == len(s.spec.y0_high) == s.spec.n
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_registry_true_theta_consistent(name):
+    """true_theta embeds rows() exactly: evaluating the library form
+    reproduces rhs on random domain points (the single-source-of-truth
+    contract the serving stack's fused rollouts rely on)."""
+    s = REGISTRY[name]()
+    lib = s.library()
+    theta = jnp.asarray(s.true_theta(lib), jnp.float32)
+    key = jax.random.PRNGKey(13)
+    ky, ku = jax.random.split(key)
+    y = s.sample_y0(ky, (32,))
+    u = (jax.random.uniform(ku, (32, s.spec.m), minval=-1.0, maxval=1.0)
+         * s.spec.input_scale) if s.spec.m else None
+    phi = lib.eval(y, u)
+    np.testing.assert_allclose(np.asarray(phi @ theta.T),
+                               np.asarray(s.rhs(y, u)), rtol=1e-5,
+                               atol=1e-6)

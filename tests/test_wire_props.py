@@ -1,0 +1,370 @@
+"""Wire-format property tests: codec round trips and hostile frames.
+
+The federation's availability story rests on two codec properties:
+
+  1. ROUND TRIP — `decode(encode(msg))` reproduces every registered
+     message exactly (scalars, None-able arrays, dtypes, shapes, 0-sized
+     blobs included), so anything a worker says survives the pipe.
+  2. TOTALITY OVER GARBAGE — `decode` of ANY byte string either returns a
+     message or raises `WireError`; no other exception type ever escapes.
+     The front door leans on this: a hostile producer must get an
+     `ErrorMsg` reply, never take the door (or the serving loop) down.
+
+Both are checked with a seeded-RNG fuzzer (hundreds of cases, always the
+same cases — CI-stable).  When the `hypothesis` plugin is available the
+same properties additionally run under its shrinking search; those
+variants are import-gated so the default environment (no hypothesis) still
+exercises the seeded pass.
+"""
+import socket
+import struct
+
+import numpy as np
+import pytest
+
+import repro.twin.wire as W
+from repro.twin.wire import (WIRE_VERSION, FrontDoorClient, IngestFrontDoor,
+                             WireError, decode, encode, read_frame,
+                             write_frame)
+
+SEED = 20260807
+_DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_]
+
+
+def _rand_array(rng, *, max_rank=3, max_dim=6):
+    dt = _DTYPES[rng.integers(len(_DTYPES))]
+    shape = tuple(int(rng.integers(0, max_dim + 1))
+                  for _ in range(int(rng.integers(0, max_rank + 1))))
+    if np.issubdtype(dt, np.floating):
+        a = rng.standard_normal(shape).astype(dt)
+    elif dt is np.bool_:
+        a = rng.integers(0, 2, shape).astype(bool)
+    else:
+        a = rng.integers(-1000, 1000, shape).astype(dt)
+    return a
+
+
+def _rand_msg(rng):
+    """One random instance of a random registered message type."""
+    builders = [
+        lambda: W.Hello(shard=int(rng.integers(0, 64)),
+                        tick=int(rng.integers(0, 1 << 20)),
+                        ckpt_tick=(None if rng.random() < 0.3
+                                   else int(rng.integers(0, 1 << 20))),
+                        samples={str(int(rng.integers(0, 99))):
+                                 int(rng.integers(0, 1 << 16))
+                                 for _ in range(int(rng.integers(0, 4)))}),
+        lambda: W.IngestBatch(
+            twin_ids=rng.integers(0, 1 << 20, int(rng.integers(0, 5)))
+            .astype(np.int64),
+            counts=rng.integers(0, 64, int(rng.integers(0, 5)))
+            .astype(np.int32),
+            y=rng.standard_normal((int(rng.integers(0, 9)),
+                                   int(rng.integers(1, 5))))
+            .astype(np.float32),
+            u=(None if rng.random() < 0.5 else
+               rng.standard_normal((int(rng.integers(0, 9)), 1))
+               .astype(np.float32)),
+            force=bool(rng.integers(0, 2))),
+        lambda: W.TickCmd(tick=int(rng.integers(0, 1 << 30)),
+                          grant=int(rng.integers(-1, 16)),
+                          inject_delay_s=float(rng.random())),
+        lambda: W.TickDone(tick=int(rng.integers(0, 1 << 30)),
+                           latency_s=float(rng.random()),
+                           deadline_met=bool(rng.integers(0, 2)),
+                           n_active=int(rng.integers(0, 64)),
+                           n_twins=int(rng.integers(0, 1 << 16)),
+                           n_guarded=int(rng.integers(0, 64)),
+                           degraded_level=int(rng.integers(0, 4)),
+                           pressure=float(rng.random()),
+                           loss=(None if rng.random() < 0.5
+                                 else float(rng.random())),
+                           events=[[int(rng.integers(0, 99)), "diverged",
+                                    float(rng.random()),
+                                    int(rng.integers(0, 99)),
+                                    float(rng.random())]
+                                   for _ in range(int(rng.integers(0, 3)))]),
+        lambda: W.Deploy(twin_ids=rng.integers(0, 99, 3).astype(np.int64),
+                         thetas=_rand_array(rng)),
+        lambda: W.PredictCmd(twin_id=int(rng.integers(0, 99)),
+                             horizon=int(rng.integers(1, 64)),
+                             us=(None if rng.random() < 0.5
+                                 else _rand_array(rng))),
+        lambda: W.PredictResult(ys=_rand_array(rng)),
+        lambda: W.Scenario(twin_id=int(rng.integers(0, 99)),
+                           horizon=int(rng.integers(1, 64)),
+                           k=(None if rng.random() < 0.5
+                              else int(rng.integers(1, 9))),
+                           us=(None if rng.random() < 0.5
+                               else rng.standard_normal((2, 4, 1))
+                               .astype(np.float32))),
+        lambda: W.ScenarioResult(
+            twin_id=int(rng.integers(0, 99)),
+            horizon=int(rng.integers(1, 64)),
+            requested_k=int(rng.integers(1, 9)),
+            k=int(rng.integers(1, 9)),
+            degraded_level=int(rng.integers(0, 4)),
+            ys=rng.standard_normal((2, 5, 3)).astype(np.float32),
+            lo=rng.standard_normal((2, 5, 3)).astype(np.float32),
+            hi=rng.standard_normal((2, 5, 3)).astype(np.float32),
+            confidence=rng.random(2).astype(np.float32)),
+        lambda: W.DrainCmd(),
+        lambda: W.Ack(n=int(rng.integers(0, 1 << 20))),
+        lambda: W.StatsCmd(kind=["latency", "stage", "reset"]
+                           [rng.integers(3)]),
+        lambda: W.Stats(data={"p50_ms": float(rng.random())}),
+        lambda: W.SnapshotCmd(),
+        lambda: W.SnapshotBlob.pack({"tick": int(rng.integers(0, 99)),
+                                     "arr": _rand_array(rng)}),
+        lambda: W.Shutdown(),
+        lambda: W.ErrorMsg(where="tick", error="boom"),
+    ]
+    return builders[rng.integers(len(builders))]()
+
+
+def _assert_same(a, b):
+    assert type(a) is type(b)
+    import dataclasses
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            assert va.dtype == vb.dtype and va.shape == vb.shape
+            np.testing.assert_array_equal(va, vb)
+        elif va is None or vb is None:
+            assert va is vb
+        else:
+            assert va == vb
+
+
+# --------------------------------------------------------------------- #
+# property 1: round trip
+# --------------------------------------------------------------------- #
+def test_roundtrip_fuzz_all_message_types():
+    rng = np.random.default_rng(SEED)
+    seen = set()
+    for _ in range(400):
+        msg = _rand_msg(rng)
+        seen.add(type(msg).TYPE)
+        out = decode(encode(msg))
+        if isinstance(msg, W.SnapshotBlob):
+            a, b = msg.unpack(), out.unpack()
+            assert a["tick"] == b["tick"]
+            np.testing.assert_array_equal(a["arr"], b["arr"])
+        else:
+            _assert_same(msg, out)
+    # the fuzzer must actually cover the registry (new messages included)
+    assert seen == set(W._REGISTRY), f"uncovered types: {set(W._REGISTRY) - seen}"
+
+
+def test_roundtrip_preserves_noncontiguous_and_views():
+    base = np.arange(48, dtype=np.float32).reshape(6, 8)
+    msg = W.PredictResult(ys=base[::2, ::2])      # strided view
+    out = decode(encode(msg))
+    np.testing.assert_array_equal(out.ys, base[::2, ::2])
+    assert out.ys.flags["C_CONTIGUOUS"]
+
+
+def test_ingest_chunks_roundtrip():
+    rng = np.random.default_rng(SEED + 1)
+    batch = [(int(i), rng.standard_normal((4, 2)).astype(np.float32),
+              rng.standard_normal((4, 1)).astype(np.float32))
+             for i in range(5)]
+    msg = decode(encode(W.IngestBatch.from_chunks(batch)))
+    for (tid, y, u), (tid2, y2, u2) in zip(batch, msg.chunks()):
+        assert tid == tid2
+        np.testing.assert_array_equal(y, y2)
+        np.testing.assert_array_equal(u, u2)
+    assert msg.n_samples == 20
+
+
+# --------------------------------------------------------------------- #
+# property 2: totality over garbage
+# --------------------------------------------------------------------- #
+def test_decode_garbage_raises_wireerror_only():
+    rng = np.random.default_rng(SEED + 2)
+    for _ in range(300):
+        n = int(rng.integers(0, 200))
+        payload = rng.integers(0, 256, n).astype(np.uint8).tobytes()
+        try:
+            decode(payload)
+        except WireError:
+            pass                                   # the only allowed failure
+
+
+def test_decode_mutated_valid_frames_never_crash():
+    """Bit-flipped REAL frames: decode returns a message or WireError —
+    never IndexError/KeyError/json errors/segfault-shaped surprises."""
+    rng = np.random.default_rng(SEED + 3)
+    for _ in range(300):
+        buf = bytearray(encode(_rand_msg(rng)))
+        for _ in range(int(rng.integers(1, 4))):
+            buf[rng.integers(len(buf))] = int(rng.integers(0, 256))
+        try:
+            decode(bytes(buf))
+        except WireError:
+            pass
+
+
+def test_decode_rejects_wrong_version():
+    buf = bytearray(encode(W.Ack(n=1)))
+    struct.pack_into(">H", buf, 0, WIRE_VERSION + 1)
+    with pytest.raises(WireError, match="wire version"):
+        decode(bytes(buf))
+
+
+def test_decode_rejects_overrunning_header_and_blob():
+    buf = bytearray(encode(W.Ack(n=1)))
+    struct.pack_into(">I", buf, 2, 1 << 20)        # header_len overrun
+    with pytest.raises(WireError, match="overruns"):
+        decode(bytes(buf))
+    frame = encode(W.PredictResult(ys=np.ones((4, 4), np.float32)))
+    with pytest.raises(WireError, match="overruns"):
+        decode(frame[:-8])                          # truncated blob
+
+
+def test_decode_rejects_unknown_type_and_bad_fields():
+    hdr = b'{"t":"no_such_message"}'
+    frame = struct.pack(">HI", WIRE_VERSION, len(hdr)) + hdr
+    with pytest.raises(WireError, match="bad header"):
+        decode(frame)
+    hdr = b'{"t":"ack","bogus_field":1}'
+    frame = struct.pack(">HI", WIRE_VERSION, len(hdr)) + hdr
+    with pytest.raises(WireError, match="bad fields"):
+        decode(frame)
+
+
+def test_untrusted_decode_enforces_allowlist():
+    for msg, ok in [(W.IngestBatch.from_chunks([(0, np.ones((2, 2)))]), True),
+                    (W.Ack(n=1), True),
+                    (W.ErrorMsg(error="x"), True),
+                    (W.Scenario(twin_id=0, horizon=4), False),
+                    (W.Deploy(twin_ids=np.zeros(1, np.int64),
+                              thetas=np.ones((1, 2, 3))), False),
+                    (W.SnapshotBlob.pack({"x": 1}), False),
+                    (W.Shutdown(), False)]:
+        if ok:
+            decode(encode(msg), trusted=False)
+        else:
+            with pytest.raises(WireError, match="untrusted"):
+                decode(encode(msg), trusted=False)
+
+
+# --------------------------------------------------------------------- #
+# stream framing + front door under hostile bytes
+# --------------------------------------------------------------------- #
+def _sock_pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def test_read_frame_rejects_oversized_length():
+    a, b = _sock_pair()
+    try:
+        a.sendall(struct.pack(">I", W._MAX_FRAME + 1))
+        with pytest.raises(WireError, match="exceeds"):
+            read_frame(b)
+    finally:
+        a.close(), b.close()
+
+
+def test_read_frame_eof_semantics():
+    a, b = _sock_pair()
+    try:
+        a.close()
+        assert read_frame(b) is None               # clean EOF
+    finally:
+        b.close()
+    a, b = _sock_pair()
+    try:
+        a.sendall(struct.pack(">I", 100) + b"short")
+        a.close()
+        with pytest.raises(WireError, match="EOF mid-frame"):
+            read_frame(b)
+    finally:
+        b.close()
+
+
+def test_write_read_frame_roundtrip_fuzz():
+    rng = np.random.default_rng(SEED + 4)
+    a, b = _sock_pair()
+    try:
+        for _ in range(50):
+            payload = rng.integers(0, 256, int(rng.integers(0, 4096))) \
+                .astype(np.uint8).tobytes()
+            write_frame(a, payload)
+            assert read_frame(b) == payload
+    finally:
+        a.close(), b.close()
+
+
+def test_front_door_survives_hostile_producer():
+    """Garbage frames, forbidden types, then a valid batch — the door must
+    answer ErrorMsg / ErrorMsg / Ack on the SAME connection, and the sink
+    must see only the valid chunks."""
+    staged = []
+
+    def sink(chunks, *, force=False):
+        staged.extend(chunks)
+        return sum(c[1].shape[0] for c in chunks)
+
+    door = IngestFrontDoor(sink)
+    rng = np.random.default_rng(SEED + 5)
+    try:
+        raw = socket.create_connection(door.address)
+        try:
+            # 1) random garbage payload
+            write_frame(raw, rng.integers(0, 256, 64).astype(np.uint8)
+                        .tobytes())
+            reply = decode(read_frame(raw), trusted=False)
+            assert isinstance(reply, W.ErrorMsg)
+            # 2) well-formed but forbidden type
+            write_frame(raw, encode(W.Shutdown()))
+            reply = decode(read_frame(raw), trusted=False)
+            assert isinstance(reply, W.ErrorMsg)
+            # 3) valid batch still lands
+            write_frame(raw, encode(W.IngestBatch.from_chunks(
+                [(7, np.ones((3, 2), np.float32))])))
+            reply = decode(read_frame(raw), trusted=False)
+            assert isinstance(reply, W.Ack) and reply.n == 3
+        finally:
+            raw.close()
+        assert len(staged) == 1 and staged[0][0] == 7
+        # the client helper sees the same contract
+        cl = FrontDoorClient(door.address)
+        try:
+            assert cl.ingest(8, np.ones((2, 2), np.float32)) == 2
+        finally:
+            cl.close()
+    finally:
+        door.close()
+
+
+# --------------------------------------------------------------------- #
+# hypothesis variants (shrinking search) — import-gated: the environment
+# without the plugin still runs everything above
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(st.binary(max_size=256))
+    def test_hyp_decode_total(payload):
+        try:
+            decode(payload)
+        except WireError:
+            pass
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(0, 1 << 30), st.integers(-1, 64),
+           st.floats(0, 10, allow_nan=False))
+    def test_hyp_tickcmd_roundtrip(tick, grant, delay):
+        msg = W.TickCmd(tick=tick, grant=grant, inject_delay_s=delay)
+        _assert_same(msg, decode(encode(msg)))

@@ -41,8 +41,11 @@ BASELINE_DIR = ROOT / "bench_out" / "baselines"
 
 # measurement columns: never part of the row-join identity
 LATENCY_COLS = ("p50_ms", "p99_ms", "fwd_ms", "grad_ms",
-                "plan_p50_ms", "plan_p99_ms")
+                "plan_p50_ms", "plan_p99_ms", "tick_p50_ms")
 COUNT_COLS = ("violations",)
+# quality columns: DECREASE beyond tolerance is the regression (recovery
+# term-selection F1 in recovery_quality.csv — tracked, warn-only gated)
+QUALITY_COLS = ("f1",)
 NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
               "schedule_ms", "refit_ms", "deployed",
               "dropped_samples", "flush_overflows", "trace_overhead_pct",
@@ -55,10 +58,16 @@ NOISY_COLS = ("max_ms", "twin_refreshes_per_s", "flush_ms", "guard_ms",
               # online_federated.csv: the federated/in-process throughput
               # ratio depends on host core count (HOST-LIMITED on starved
               # machines) — reported, never gated
-              "speedup", "grants_migrated")
+              "speedup", "grants_migrated",
+              # scenarios.csv: what-if throughput is host-load sensitive;
+              # the gated signals are its latency/violation columns
+              "scenarios_per_s", "shrunk", "refused",
+              # recovery_quality.csv companions to the gated f1 column
+              "precision", "recall", "mse")
 # NOTE: "ticks" stays in the identity — it separates smoke (6) / quick (12)
 # / full (24) rows of the same sweep point, which have different baselines.
-MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
+MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + QUALITY_COLS
+                         + NOISY_COLS)
 
 # fault-injection tables are gated WARN-ONLY even in strict mode: the
 # kill-shard row's tail latency is the restore tick (disk + replay bound,
@@ -67,7 +76,12 @@ MEASURE_COLS = frozenset(LATENCY_COLS + COUNT_COLS + NOISY_COLS)
 # online_federated.csv is warn-only for its first release: worker-process
 # boot and IPC latency vary with CI host load far more than in-process
 # ticks do; tests/test_federation.py is the hard gate on the semantics.
-WARN_ONLY_FILES = frozenset({"online_chaos.csv", "online_federated.csv"})
+# recovery_quality.csv is warn-only by design: it exists to make recovery
+# accuracy (incl. the Lotka-Volterra identifiability xfail) a TRACKED
+# number; promoting it to a hard gate is the ROADMAP's recovery-quality
+# item, not this file's.
+WARN_ONLY_FILES = frozenset({"online_chaos.csv", "online_federated.csv",
+                             "recovery_quality.csv"})
 
 
 def load_csv(path: Path) -> list[dict]:
@@ -124,6 +138,15 @@ def compare_rows(fresh: list[dict], base: list[dict], *,
                 regressions.append(
                     f"[{ident}] {col}: {new:.0f} vs baseline {old:.0f} "
                     f"(deadline misses must not increase)")
+        for col in QUALITY_COLS:
+            new, old = _num(row.get(col)), _num(ref.get(col))
+            if new is None or old is None or old <= 0:
+                continue
+            if new < old * (1.0 - tolerance):
+                regressions.append(
+                    f"[{ident}] {col}: {new:.3f} vs baseline {old:.3f} "
+                    f"(-{(1 - new / old) * 100:.0f}% > "
+                    f"{tolerance * 100:.0f}% tolerance)")
     return regressions, checked, skipped
 
 
